@@ -1,0 +1,143 @@
+"""Shared harness for the paper's queue benchmarks.
+
+Reproduces the paper's methodology (§4): round-robin sequencing across
+implementations, 3-sigma filtering of latency samples, PxC producer/consumer
+threading, plus two scheduler-independent metrics the 1-core container can
+measure faithfully — atomic ops per operation and retry/scan counts.
+"""
+
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.atomics import op_counts, reset_op_counts
+from repro.core.baselines import make_queue
+
+QUEUES = ("cmp", "ms_hp", "segmented", "mutex")
+
+
+def three_sigma_filter(xs: List[float]) -> List[float]:
+    if len(xs) < 8:
+        return xs
+    mu = statistics.fmean(xs)
+    sd = statistics.pstdev(xs) or 1e-12
+    return [x for x in xs if abs(x - mu) <= 3 * sd]
+
+
+def throughput_run(kind: str, producers: int, consumers: int,
+                   items_per_producer: int, synthetic_work: int = 0) -> Dict:
+    """Returns items/sec + op-level stats for one PxC configuration."""
+    q = make_queue(kind)
+    total = producers * items_per_producer
+    consumed = [0] * consumers
+    done = threading.Event()
+
+    def spin(n):
+        acc = 0
+        for i in range(n):
+            acc += i * i
+        return acc
+
+    def prod(pid):
+        for i in range(items_per_producer):
+            q.enqueue((pid, i))
+            if synthetic_work:
+                spin(synthetic_work)
+
+    def cons(cid):
+        got = 0
+        while not done.is_set():
+            d = q.dequeue()
+            if d is None:
+                if sum(consumed) + got >= total:
+                    break
+                time.sleep(0)
+                continue
+            got += 1
+            consumed[cid] = got
+            if synthetic_work:
+                spin(synthetic_work)
+            if sum(consumed) >= total:
+                done.set()
+
+    threads = ([threading.Thread(target=prod, args=(p,)) for p in range(producers)]
+               + [threading.Thread(target=cons, args=(c,)) for c in range(consumers)])
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    dt = time.perf_counter() - t0
+    return {"kind": kind, "P": producers, "C": consumers,
+            "items_per_sec": total / dt, "seconds": dt, "total": total}
+
+
+def latency_run(kind: str, producers: int, consumers: int, samples: int = 2000) -> Dict:
+    """Per-op latency (ns): avg + P99 for enqueue and dequeue, 3-sigma
+    filtered, measured on one instrumented thread while P+C-1 background
+    threads generate contention (paper Tables 1-3 methodology)."""
+    q = make_queue(kind)
+    stop = threading.Event()
+
+    def background_churn():
+        i = 0
+        while not stop.is_set():
+            q.enqueue(i)
+            q.dequeue()
+            i += 1
+
+    n_bg = max(0, producers + consumers - 2)
+    bg = [threading.Thread(target=background_churn, daemon=True) for _ in range(n_bg)]
+    for t in bg:
+        t.start()
+    enq_ns, deq_ns = [], []
+    for i in range(samples):
+        t0 = time.perf_counter_ns()
+        q.enqueue(i)
+        enq_ns.append(time.perf_counter_ns() - t0)
+        t0 = time.perf_counter_ns()
+        q.dequeue()
+        deq_ns.append(time.perf_counter_ns() - t0)
+    stop.set()
+    for t in bg:
+        t.join(timeout=5)
+    enq_ns = three_sigma_filter(enq_ns)
+    deq_ns = three_sigma_filter(deq_ns)
+    return {
+        "kind": kind, "P": producers, "C": consumers,
+        "avg_enq_ns": statistics.fmean(enq_ns),
+        "p99_enq_ns": float(np.percentile(enq_ns, 99)),
+        "avg_deq_ns": statistics.fmean(deq_ns),
+        "p99_deq_ns": float(np.percentile(deq_ns, 99)),
+    }
+
+
+def atomic_op_run(kind: str, ops: int = 2000) -> Dict:
+    """Atomic operations per enqueue/dequeue (scheduler-independent; paper
+    §3.3: 3-5 enq, §3.5: 4-9 deq for CMP)."""
+    q = make_queue(kind)
+    q.enqueue(0)
+    q.dequeue()
+    reset_op_counts()
+    for i in range(ops):
+        q.enqueue(i)
+    enq_counts = op_counts()
+    enq = sum(enq_counts.values()) / ops
+    # "algorithm atomics" in the paper's sense: CAS + fetch-and-add + shared
+    # loads on the queue structure, excluding pool internals & plain stores
+    enq_rmw = (enq_counts.get("cas", 0) + enq_counts.get("faa", 0)) / ops
+    reset_op_counts()
+    for _ in range(ops):
+        q.dequeue()
+    deq_counts = op_counts()
+    deq = sum(deq_counts.values()) / ops
+    deq_rmw = (deq_counts.get("cas", 0) + deq_counts.get("faa", 0)) / ops
+    return {"kind": kind, "atomics_per_enq": enq, "atomics_per_deq": deq,
+            "rmw_per_enq": enq_rmw, "rmw_per_deq": deq_rmw,
+            "enq_breakdown": {k: v / ops for k, v in enq_counts.items()},
+            "deq_breakdown": {k: v / ops for k, v in deq_counts.items()}}

@@ -1,0 +1,49 @@
+"""The CMP queue as a production input pipeline: coordination-free
+producer/consumer flow, straggler absorption, bounded memory, exact resume.
+
+  PYTHONPATH=src python examples/data_pipeline_demo.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.data.pipeline import DataPipeline               # noqa: E402
+
+
+def main():
+    pipe = DataPipeline(batch=4, seq=128, vocab=32000, num_producers=3,
+                        window=32)
+    it = iter(pipe)
+
+    print("== phase 1: steady state ==")
+    t0 = time.time()
+    for i in range(20):
+        b = next(it)
+    print(f"20 batches in {time.time()-t0:.3f}s; queue nodes: "
+          f"{pipe.queue.live_nodes()} (bounded by window+backpressure)")
+
+    print("== phase 2: producer 0 stalls 0.5s (straggler) ==")
+    pipe.stall_producer(0, 0.5)
+    t0 = time.time()
+    got = [next(it)["batch_id"] for _ in range(15)]
+    dt = time.time() - t0
+    print(f"15 batches in {dt:.3f}s while producer 0 was stalled "
+          f"({'NOT blocked' if dt < 0.5 else 'BLOCKED!'}) — the window "
+          f"absorbed the straggler")
+
+    print("== phase 3: checkpoint + exact resume ==")
+    state = pipe.state()
+    pipe.close()
+    pipe2 = DataPipeline.from_state(state, batch=4, seq=128, vocab=32000,
+                                    window=32)
+    b = next(iter(pipe2))
+    print(f"resumed; first batch id {b['batch_id']} continues the frontier "
+          f"{state['cursors']}")
+    pipe2.close()
+    print("demo OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import ARCHS, SHAPES, InputShape, ModelConfig, cell_is_runnable, get_config
+
+__all__ = ["ARCHS", "SHAPES", "InputShape", "ModelConfig", "cell_is_runnable", "get_config"]

@@ -1,0 +1,14 @@
+"""CMP core: the paper's contribution.
+
+Host side (faithful shared-memory reproduction):
+  - :class:`repro.core.cmp.CMPQueue` — Algorithms 1, 3, 4.
+  - :mod:`repro.core.baselines` — M&S+hazard-pointers, segmented, mutex.
+
+Device side (TPU-native adaptation, DESIGN.md §2):
+  - :mod:`repro.core.slotpool` — cyclic slot pool with window reclamation.
+"""
+
+from repro.core.cmp import AVAILABLE, CLAIMED, CMPQueue
+from repro.core.window import compute_window
+
+__all__ = ["CMPQueue", "AVAILABLE", "CLAIMED", "compute_window"]

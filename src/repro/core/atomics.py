@@ -1,0 +1,120 @@
+"""Atomic primitives for the host-side (shared-memory) queue implementations.
+
+CPython has no native CAS on arbitrary fields.  ``AtomicCell`` emulates one
+atomic machine word with a per-cell lock: a CAS on a cell contends only with
+other operations on the *same* cell, which structurally mirrors cache-line
+contention on real hardware.  Plain loads/stores are GIL-atomic and lock-free.
+
+Every atomic operation is counted per-thread so benchmarks can report the
+paper's scheduler-independent metric (atomic ops / queue operation: CMP claims
+3-5 enq, 4-9 deq) and a *chaos hook* may be installed to inject delays or
+yields at atomic boundaries for interleaving fuzz tests.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional
+
+# ---------------------------------------------------------------------------
+# instrumentation
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+# Optional callable invoked before every atomic op: hook(kind: str) -> None.
+_chaos_hook: Optional[Callable[[str], None]] = None
+
+
+def set_chaos_hook(hook: Optional[Callable[[str], None]]) -> None:
+    global _chaos_hook
+    _chaos_hook = hook
+
+
+def reset_op_counts() -> None:
+    _tls.ops = {}
+
+
+def op_counts() -> dict:
+    """Per-thread atomic-op counts since last reset (for the calling thread)."""
+    return dict(getattr(_tls, "ops", {}))
+
+
+def total_ops() -> int:
+    return sum(getattr(_tls, "ops", {}).values())
+
+
+def _count(kind: str) -> None:
+    if _chaos_hook is not None:
+        _chaos_hook(kind)
+    ops = getattr(_tls, "ops", None)
+    if ops is None:
+        ops = {}
+        _tls.ops = ops
+    ops[kind] = ops.get(kind, 0) + 1
+
+
+# ---------------------------------------------------------------------------
+# atomic cell
+# ---------------------------------------------------------------------------
+
+
+class AtomicCell:
+    """One atomic variable (pointer- or integer-valued)."""
+
+    __slots__ = ("_v", "_lock")
+
+    def __init__(self, value: Any = None):
+        self._v = value
+        self._lock = threading.Lock()
+
+    # Loads/stores are single bytecode ops under the GIL -> atomic.
+    def load(self) -> Any:
+        _count("load")
+        return self._v
+
+    def store(self, value: Any) -> None:
+        _count("store")
+        self._v = value
+
+    def cas(self, expected: Any, new: Any) -> bool:
+        """Compare-and-swap by identity (pointers) or equality (ints)."""
+        _count("cas")
+        with self._lock:
+            cur = self._v
+            ok = cur is expected or cur == expected
+            if ok:
+                self._v = new
+            return ok
+
+    def fetch_inc(self) -> int:
+        """Atomically increment; returns the *new* value (paper: INCREMENT)."""
+        _count("faa")
+        with self._lock:
+            self._v += 1
+            return self._v
+
+    def fetch_add(self, delta: int) -> int:
+        """Atomically add; returns the *old* value."""
+        _count("faa")
+        with self._lock:
+            old = self._v
+            self._v = old + delta
+            return old
+
+    def fetch_max(self, value: int) -> int:
+        """Monotone max-publish (CMP Phase 5 boundary update)."""
+        _count("cas")
+        with self._lock:
+            if value > self._v:
+                self._v = value
+            return self._v
+
+
+def cpu_pause() -> None:
+    """Paper's CPU_PAUSE: yield the core briefly under contention."""
+    _count("pause")
+    # time.sleep(0) releases the GIL, the closest analogue to `pause`.
+    import time
+
+    time.sleep(0)

@@ -1,0 +1,315 @@
+"""Cyclic Memory Protection (CMP) queue — faithful implementation of the paper's
+Algorithms 1 (enqueue), 3 (dequeue) and 4 (coordination-free reclamation).
+
+Properties implemented exactly as in the paper:
+
+* strict global FIFO (append-only linking + cursor minimality + earliest claim),
+* unbounded capacity (nodes allocated on demand, recycled via a type-stable pool),
+* two-state node lifecycle AVAILABLE -> CLAIMED,
+* immutable monotone per-node ``cycle`` assigned at enqueue,
+* unilateral monotone publication of ``deque_cycle`` (no handshakes),
+* sliding protection window  P = [deque_cycle - W, deque_cycle]  — a node is
+  reclaimed iff  (state != AVAILABLE) and (cycle < deque_cycle - W),
+* reclamation triggered every N enqueues (cycle % N == 0), single reclaimer at
+  a time, batched head advancement, stalled-thread tolerance (a CLAIMED node
+  from a dead thread is reclaimed after at most W further dequeue cycles).
+
+The Michael & Scott *helping* mechanism is deliberately absent (paper §3.4):
+on observing a stale tail the enqueuer retries with fresh state instead of
+CAS-ing the tail forward from a stale observation.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, List, Optional
+
+from repro.core.atomics import AtomicCell, cpu_pause
+from repro.core.window import compute_window
+
+# Node states.
+AVAILABLE = 1
+CLAIMED = 2
+
+_RETRY_PAUSE_THRESHOLD = 3  # paper Alg 1 line 17
+
+
+class Node:
+    """Queue node. ``cycle`` is immutable after enqueue-publication; ``next``,
+    ``data`` and ``state`` are atomic. Nodes are recycled, never freed (type-
+    stable pool), so any stale pointer still references a valid Node."""
+
+    __slots__ = ("cycle", "next", "data", "state")
+
+    def __init__(self):
+        self.cycle = 0
+        self.next = AtomicCell(None)
+        self.data = AtomicCell(None)
+        self.state = AtomicCell(CLAIMED)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"<Node cycle={self.cycle} state={self.state._v}>"
+
+
+class NodePool:
+    """Type-stable node pool: a Treiber stack of recycled nodes. Nodes are
+    never returned to the OS; pool underflow allocates fresh nodes (unbounded
+    capacity). ``next`` is reused as the free-list link."""
+
+    def __init__(self, prealloc: int = 0):
+        self._top = AtomicCell(None)
+        self.allocated = 0  # total Nodes ever constructed (monotone)
+        self._alloc_lock = threading.Lock()
+        for _ in range(prealloc):
+            self.put(self._fresh())
+
+    def _fresh(self) -> Node:
+        with self._alloc_lock:
+            self.allocated += 1
+        return Node()
+
+    def get(self) -> Node:
+        while True:
+            top = self._top.load()
+            if top is None:
+                return self._fresh()
+            nxt = top.next.load()
+            if self._top.cas(top, nxt):
+                top.next.store(None)
+                return top
+
+    def put(self, node: Node) -> None:
+        while True:
+            top = self._top.load()
+            node.next.store(top)
+            if self._top.cas(top, node):
+                return
+
+    def size(self) -> int:
+        """O(n) free-list length (diagnostics only)."""
+        n, cur = 0, self._top.load()
+        while cur is not None:
+            n += 1
+            cur = cur.next.load()
+        return n
+
+
+class CMPQueue:
+    """Lock-free MPMC FIFO queue with Cyclic Memory Protection.
+
+    Args:
+      window: protection window W (cycles). If None, derived via
+        ``compute_window(ops_per_sec, resilience_s)``.
+      reclaim_period: N — reclamation trigger every N enqueues.
+      min_batch: MIN_BATCH_SIZE for batched reclamation.
+      prealloc: nodes to pre-populate the type-stable pool with.
+    """
+
+    def __init__(
+        self,
+        window: Optional[int] = None,
+        *,
+        ops_per_sec: float = 1e6,
+        resilience_s: float = 0.001,
+        reclaim_period: int = 64,
+        min_batch: int = 8,
+        prealloc: int = 0,
+        cursor_to_claimed: bool = True,
+    ):
+        self.window = int(window) if window is not None else compute_window(ops_per_sec, resilience_s)
+        self.reclaim_period = int(reclaim_period)
+        self.min_batch = int(min_batch)
+        # Beyond-paper fix (EXPERIMENTS.md §Perf host iteration): the paper's
+        # Alg 3 Phase 4 advances scan_cursor only to current.next, so when
+        # the claimed node is the tail (next == NULL) the cursor stays put
+        # and strict-alternation workloads re-walk the whole retained window
+        # (O(W) per dequeue, measured 583us at W=1000). Advancing to the
+        # claimed node itself preserves cursor minimality (everything at or
+        # before it is non-AVAILABLE) and restores O(1). Set False for the
+        # paper-faithful behavior.
+        self.cursor_to_claimed = bool(cursor_to_claimed)
+        self.pool = NodePool(prealloc)
+
+        dummy = self.pool.get()
+        dummy.cycle = 0
+        dummy.state.store(CLAIMED)  # dummy is never claimable
+        self.head = AtomicCell(dummy)
+        self.tail = AtomicCell(dummy)
+        self.scan_cursor = AtomicCell(dummy)
+        self.cycle = AtomicCell(0)        # global enqueue cycle counter
+        self.deque_cycle = AtomicCell(0)  # highest claimed cycle (monotone)
+        self._reclaiming = AtomicCell(0)  # single-reclaimer guard (try-lock)
+
+        # Diagnostics (non-atomic; approximate under races, exact when quiesced).
+        self.stats = {"enq_retries": 0, "deq_scans": 0, "reclaimed": 0, "reclaim_passes": 0}
+
+    # ------------------------------------------------------------------
+    # Algorithm 1: lock-free enqueue
+    # ------------------------------------------------------------------
+    def enqueue(self, data: Any) -> bool:
+        if data is None:
+            raise ValueError("CMPQueue payloads must be non-None (None marks empty slots)")
+        # Phase 1: node allocation and cycle assignment.
+        node = self.pool.get()
+        node.data.store(data)
+        node.next.store(None)
+        node.state.store(AVAILABLE)
+        cycle = self.cycle.fetch_inc()
+        node.cycle = cycle  # immutable from here on
+
+        # Phase 2: lock-free insertion (M&S minus helping).
+        retry_count = 0
+        while True:
+            tail = self.tail.load()
+            nxt = tail.next.load()
+            if nxt is not None:
+                # Tail is stale: retry with fresh state (no helping, §3.4).
+                retry_count += 1
+                self.stats["enq_retries"] += 1
+                if retry_count > _RETRY_PAUSE_THRESHOLD:
+                    cpu_pause()
+                continue
+            if tail.next.cas(None, node):
+                # Optional tail advancement; failure is benign.
+                self.tail.cas(tail, node)
+                break
+            retry_count += 1
+            self.stats["enq_retries"] += 1
+
+        # Phase 3: conditional reclamation (deterministic modulo policy).
+        if cycle % self.reclaim_period == 0:
+            self.reclaim()
+        return True
+
+    # ------------------------------------------------------------------
+    # Algorithm 3: lock-free dequeue
+    # ------------------------------------------------------------------
+    def dequeue(self) -> Optional[Any]:
+        current = self.head.load()  # non-NULL (dummy)
+        last_deque_cycle = -1       # force initial cursor load
+        last_cursor = current
+        cursor_cycle = current.cycle
+
+        # Phases 1+2: scan-cursor load and atomic node claiming.
+        while current is not None:
+            deque_cycle = self.deque_cycle.load()
+            if deque_cycle != last_deque_cycle:
+                # Other threads progressed: re-accelerate from the cursor.
+                last_deque_cycle = deque_cycle
+                current = self.scan_cursor.load()
+                last_cursor = current
+                cursor_cycle = last_cursor.cycle
+            if current.state.cas(AVAILABLE, CLAIMED):
+                break
+            self.stats["deq_scans"] += 1
+            current = current.next.load()
+
+        if current is None:
+            return None  # empty dequeue linearizes at cursor reaching null
+
+        # Phase 3: claim data with CAS (guards vs stalled-thread ABA reuse).
+        if current.state.load() == AVAILABLE:
+            return None  # node was recycled underneath us (we were stalled)
+        data = current.data.load()
+        if data is None or not current.data.cas(data, None):
+            return None
+
+        advance_boundary = True
+        # Phase 4: opportunistic scan-cursor advance (pointer+cycle dual check
+        # eliminates ABA: cycles are monotone, so a recycled same-address node
+        # can never satisfy both conditions).
+        sc = self.scan_cursor.load()
+        if sc is last_cursor and cursor_cycle == sc.cycle:
+            nxt = current.next.load()
+            if nxt is None and self.cursor_to_claimed:
+                nxt = current  # tail claimed: park cursor on it (see __init__)
+            advance_boundary = False
+            if nxt is None or self.scan_cursor.cas(last_cursor, nxt):
+                advance_boundary = True
+
+        # Phase 5: protection boundary update (monotone max publish).
+        if advance_boundary:
+            cyc = self.deque_cycle.load()
+            while cyc < current.cycle:
+                if self.deque_cycle.cas(cyc, current.cycle):
+                    break
+                cyc = self.deque_cycle.load()
+
+        return data
+
+    # ------------------------------------------------------------------
+    # Algorithm 4: coordination-free memory reclamation
+    # ------------------------------------------------------------------
+    def reclaim(self) -> int:
+        """Batched, lock-free reclamation. Returns number of nodes recycled.
+        Non-blocking: if another thread is reclaiming, returns immediately."""
+        if not self._reclaiming.cas(0, 1):
+            return 0
+        reclaimed = 0
+        try:
+            self.stats["reclaim_passes"] += 1
+            # Phase 1: protection boundary.
+            cycle = self.deque_cycle.load()
+            safe_cycle = max(0, cycle - self.window)
+            head = self.head.load()
+            current = head.next.load()
+
+            while current is not None:
+                original_next = current
+                new_next = current
+                batch: List[Node] = []
+                # Phases 2-4: collect a batch of safely reclaimable nodes.
+                while current is not None:
+                    if current.cycle >= safe_cycle:
+                        break  # cycle-based protection (immutable, plain read)
+                    if current.state.load() == AVAILABLE:
+                        break  # state-based protection
+                    batch.append(current)
+                    nxt = current.next.load()
+                    new_next = nxt
+                    current = nxt
+                if len(batch) < self.min_batch:
+                    break
+                # Phase 5: single CAS advances head.next across the batch.
+                if head.next.cas(original_next, new_next):
+                    for node in batch:
+                        # Terminate stale traversals, then recycle.
+                        node.next.store(None)
+                        node.data.store(None)
+                        self.pool.put(node)
+                    reclaimed += len(batch)
+                else:
+                    break  # concurrent modification: abandon, retry later
+        finally:
+            self._reclaiming.store(0)
+        self.stats["reclaimed"] += reclaimed
+        return reclaimed
+
+    # ------------------------------------------------------------------
+    # diagnostics
+    # ------------------------------------------------------------------
+    def live_nodes(self) -> int:
+        """Nodes currently linked from head (incl. dummy). O(n), diagnostics."""
+        n, cur = 0, self.head.load()
+        while cur is not None:
+            n += 1
+            cur = cur.next.load()
+        return n
+
+    def snapshot_invariants(self) -> dict:
+        """Checked by tests: window safety + cursor minimality (quiesced)."""
+        dc = self.deque_cycle.load()
+        safe = max(0, dc - self.window)
+        head = self.head.load()
+        cur = head.next.load()
+        min_linked_cycle = None
+        while cur is not None:
+            if min_linked_cycle is None:
+                min_linked_cycle = cur.cycle
+            cur = cur.next.load()
+        return {
+            "deque_cycle": dc,
+            "safe_cycle": safe,
+            "min_linked_cycle": min_linked_cycle,
+            "enq_cycle": self.cycle.load(),
+        }

@@ -1,0 +1,209 @@
+"""Device-side CMP: a cyclic slot pool as a pure-functional JAX structure.
+
+This is the TPU-native embodiment of the paper's mechanism (DESIGN.md §2).
+TPU SPMD has no CAS and no intra-step races, so the paper's *claim CAS*
+becomes a deterministic earliest-cycle selection computed with vector ops,
+while everything else carries over exactly:
+
+* two-state lifecycle  FREE -> AVAILABLE -> CLAIMED -> (window) -> FREE,
+* immutable monotone ``cycle`` assigned when a slot becomes AVAILABLE,
+* monotone ``deque_cycle`` published by claims (fetch-max, coordination-free),
+* reclamation predicate  (state == CLAIMED) & (cycle < deque_cycle - W).
+
+Concurrency on device exists *between* asynchronous actors (decode steps in
+flight, host prefetch, checkpoint writers); the window invariant — not CAS —
+is what makes reuse safe there, exactly the paper's argument.
+
+Two reclamation predicates are provided:
+
+* ``reclaim``         — the paper's: enqueue-cycle vs window (FIFO lifetimes:
+                        MoE capacity slots, microbatch buffers).
+* ``reclaim_retired`` — generalized for non-FIFO lifetimes (paged KV blocks):
+                        the window counts from the *retire* cycle, preserving
+                        the guarantee that any actor which observed the slot
+                        live gets >= W cycles of grace. Documented adaptation.
+
+All ops are fixed-shape, jittable, vmappable and shardable; invalid lanes are
+signalled with id == num_slots and dropped by scatters (mode='drop').
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FREE = 0
+AVAILABLE = 1
+CLAIMED = 2
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+class SlotPool(NamedTuple):
+    state: jax.Array        # [N] int32 in {FREE, AVAILABLE, CLAIMED}
+    cycle: jax.Array        # [N] int32 — cycle at AVAILABLE-transition (immutable until realloc)
+    retire_cycle: jax.Array  # [N] int32 — deque_cycle observed at claim
+    enq_cycle: jax.Array    # []  int32 — global monotone enqueue counter
+    deque_cycle: jax.Array  # []  int32 — highest claimed cycle (monotone publish)
+
+    @property
+    def num_slots(self) -> int:
+        return self.state.shape[-1]
+
+
+def make(num_slots: int) -> SlotPool:
+    z = jnp.zeros((num_slots,), jnp.int32)
+    return SlotPool(state=z, cycle=z, retire_cycle=z,
+                    enq_cycle=jnp.int32(0), deque_cycle=jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# produce: FREE -> AVAILABLE (enqueue / block allocation)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def produce(pool: SlotPool, k: int) -> Tuple[SlotPool, jax.Array, jax.Array]:
+    """Move up to ``k`` FREE slots to AVAILABLE, assigning fresh cycles.
+
+    Returns (pool', ids[k], valid[k]). Lowest-index-first selection (the pool
+    is type-stable: a slot id permanently names the same buffer).
+    """
+    n = pool.num_slots
+    key = jnp.where(pool.state == FREE, jnp.arange(n, dtype=jnp.int32), _INT_MAX)
+    neg, ids = jax.lax.top_k(-key, min(k, n))
+    if k > n:  # over-ask: pad with invalid lanes
+        neg = jnp.concatenate([neg, jnp.full((k - n,), -_INT_MAX, neg.dtype)])
+        ids = jnp.concatenate([ids, jnp.full((k - n,), n, ids.dtype)])
+    valid = neg != -_INT_MAX
+    ids = jnp.where(valid, ids, n).astype(jnp.int32)  # n => dropped by scatter
+    # Paper Phase 1: each produced slot gets the next monotone cycle.
+    new_cycles = pool.enq_cycle + jnp.cumsum(valid.astype(jnp.int32))
+    state = pool.state.at[ids].set(AVAILABLE, mode="drop")
+    cycle = pool.cycle.at[ids].set(new_cycles, mode="drop")
+    enq_cycle = pool.enq_cycle + jnp.sum(valid.astype(jnp.int32))
+    return pool._replace(state=state, cycle=cycle, enq_cycle=enq_cycle), ids, valid
+
+
+# ---------------------------------------------------------------------------
+# claim: AVAILABLE -> CLAIMED (dequeue / block release)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def claim(pool: SlotPool, k: int) -> Tuple[SlotPool, jax.Array, jax.Array]:
+    """Claim up to ``k`` earliest-cycle AVAILABLE slots (strict FIFO).
+
+    The earliest-claim property (paper §3.7 FIFO invariant 3) is realized as a
+    deterministic min-cycle selection; ``deque_cycle`` is advanced by a
+    monotone max-publish exactly as in dequeue Phase 5.
+    """
+    n = pool.num_slots
+    key = jnp.where(pool.state == AVAILABLE, pool.cycle, _INT_MAX)
+    neg, ids = jax.lax.top_k(-key, min(k, n))
+    if k > n:
+        neg = jnp.concatenate([neg, jnp.full((k - n,), -_INT_MAX, neg.dtype)])
+        ids = jnp.concatenate([ids, jnp.full((k - n,), n, ids.dtype)])
+    valid = neg != -_INT_MAX
+    ids = jnp.where(valid, ids, n).astype(jnp.int32)
+    state = pool.state.at[ids].set(CLAIMED, mode="drop")
+    retire = pool.retire_cycle.at[ids].set(pool.deque_cycle, mode="drop")
+    claimed_max = jnp.max(jnp.where(valid, -neg, 0).astype(jnp.int32))
+    deque_cycle = jnp.maximum(pool.deque_cycle, claimed_max)  # fetch-max publish
+    retire = retire.at[ids].set(deque_cycle, mode="drop")
+    return pool._replace(state=state, retire_cycle=retire, deque_cycle=deque_cycle), ids, valid
+
+
+@jax.jit
+def claim_ids(pool: SlotPool, ids: jax.Array, valid: jax.Array) -> SlotPool:
+    """Claim *specific* slots (e.g. a finishing request retiring its KV
+    blocks). Invalid lanes must carry id == num_slots."""
+    ids = jnp.where(valid, ids, pool.num_slots).astype(jnp.int32)
+    state = pool.state.at[ids].set(CLAIMED, mode="drop")
+    retire = pool.retire_cycle.at[ids].set(pool.deque_cycle, mode="drop")
+    claimed_max = jnp.max(jnp.where(valid, pool.cycle[jnp.clip(ids, 0, pool.num_slots - 1)], 0))
+    deque_cycle = jnp.maximum(pool.deque_cycle, claimed_max)
+    return pool._replace(state=state, retire_cycle=retire, deque_cycle=deque_cycle)
+
+
+# ---------------------------------------------------------------------------
+# boundary publish + reclamation
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def advance(pool: SlotPool, observed_cycle: jax.Array) -> SlotPool:
+    """Unilateral monotone boundary publish (paper dequeue Phase 5)."""
+    return pool._replace(deque_cycle=jnp.maximum(pool.deque_cycle, observed_cycle))
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def reclaim(pool: SlotPool, window: int) -> Tuple[SlotPool, jax.Array]:
+    """Paper §3.6 predicate: (state == CLAIMED) & (cycle < deque_cycle - W).
+
+    Returns (pool', num_reclaimed). Coordination-free: a pure function of
+    locally observed state; AVAILABLE slots are absolutely protected.
+    """
+    safe_cycle = jnp.maximum(0, pool.deque_cycle - window)
+    mask = (pool.state == CLAIMED) & (pool.cycle < safe_cycle)
+    state = jnp.where(mask, FREE, pool.state)
+    return pool._replace(state=state), jnp.sum(mask.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def reclaim_retired(pool: SlotPool, window: int) -> Tuple[SlotPool, jax.Array]:
+    """Generalized predicate for non-FIFO lifetimes (paged KV blocks):
+    (state == CLAIMED) & (retire_cycle < deque_cycle - W)."""
+    safe_cycle = jnp.maximum(0, pool.deque_cycle - window)
+    mask = (pool.state == CLAIMED) & (pool.retire_cycle < safe_cycle)
+    state = jnp.where(mask, FREE, pool.state)
+    return pool._replace(state=state), jnp.sum(mask.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def produce_with_reclaim(pool: SlotPool, k: int, window: int):
+    """Paper Alg 1 Phase 1: allocation failure triggers immediate reclamation
+    and a retry — automatic memory-pressure relief."""
+    pool, ids, valid = produce(pool, k)
+    need_retry = ~jnp.all(valid)
+
+    def _retry(p):
+        p, _ = reclaim_retired(p, window)
+        p, ids2, valid2 = produce(p, k)
+        return p, ids2, valid2
+
+    return jax.lax.cond(need_retry, _retry, lambda p: (p, ids, valid), pool)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics / invariants (used by hypothesis property tests)
+# ---------------------------------------------------------------------------
+
+
+def counts(pool: SlotPool) -> dict:
+    return {
+        "free": int(jnp.sum(pool.state == FREE)),
+        "available": int(jnp.sum(pool.state == AVAILABLE)),
+        "claimed": int(jnp.sum(pool.state == CLAIMED)),
+        "enq_cycle": int(pool.enq_cycle),
+        "deque_cycle": int(pool.deque_cycle),
+    }
+
+
+def check_invariants(pool: SlotPool, window: int) -> None:
+    """Raises AssertionError if any CMP invariant is violated."""
+    state = jax.device_get(pool.state)
+    cycle = jax.device_get(pool.cycle)
+    dc = int(pool.deque_cycle)
+    eq = int(pool.enq_cycle)
+    assert dc <= eq, f"deque_cycle {dc} ran ahead of enq_cycle {eq}"
+    avail = state == AVAILABLE
+    # AVAILABLE slots are inside-or-ahead of the window => absolutely protected.
+    if avail.any():
+        assert cycle[avail].max() <= eq
+    # cycles of AVAILABLE slots are unique (monotone assignment).
+    av_cycles = cycle[avail]
+    assert len(set(av_cycles.tolist())) == len(av_cycles), "duplicate live cycles"

@@ -1,0 +1,129 @@
+"""Host data pipeline: producer threads -> CMP queue -> training batches.
+
+This is the paper's queue in its natural production habitat (DESIGN.md §2):
+multiple tokenizer/packer threads enqueue ready batches; the train loop
+dequeues. The protection window bounds pipeline memory at W x batch_bytes and
+a stalled producer can never block the consumer (nor vice versa) — the
+coordination-free property the paper proves, applied to input pipelines.
+
+Batch *content* is a pure function of (seed, batch_id): any batch can be
+regenerated, so checkpointing the consumed-id frontier gives exact resume.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.cmp import CMPQueue
+
+
+def synth_batch(seed: int, batch_id: int, batch: int, seq: int, vocab: int) -> Dict:
+    """Deterministic synthetic packed token batch (zipf-ish unigram docs with
+    BOS-separated documents, mimicking packed pretraining sequences)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, batch_id]))
+    # zipf-like unigram distribution over the vocab
+    ranks = np.arange(1, vocab + 1)
+    probs = 1.0 / ranks ** 1.1
+    probs /= probs.sum()
+    tokens = rng.choice(vocab, size=(batch, seq + 1), p=probs).astype(np.int32)
+    # sprinkle document boundaries (token 0 as BOS)
+    doc_mask = rng.random((batch, seq + 1)) < (1.0 / 512)
+    tokens[doc_mask] = 0
+    return {"tokens": tokens, "batch_id": batch_id}
+
+
+class DataPipeline:
+    """num_producers threads generating batches into a CMPQueue.
+
+    Producer p generates ids p, p+P, p+2P, ... starting from its cursor.
+    ``state()``/restore give exact-resume cursors. A ``stall_producer`` hook
+    simulates a straggler host (used by tests/benchmarks to demonstrate the
+    window-bounded tolerance).
+    """
+
+    def __init__(self, batch: int, seq: int, vocab: int, *, seed: int = 0,
+                 num_producers: int = 2, window: int = 64,
+                 start_cursors: Optional[List[int]] = None,
+                 max_queue_batches: int = 32):
+        self.batch, self.seq, self.vocab, self.seed = batch, seq, vocab, seed
+        self.num_producers = num_producers
+        self.queue = CMPQueue(window=window, reclaim_period=16, min_batch=2)
+        self._cursors = list(start_cursors) if start_cursors else list(range(num_producers))
+        self._consumed = dict((p, c - num_producers) for p, c in enumerate(self._cursors))
+        self._stop = threading.Event()
+        self._stalls: Dict[int, float] = {}
+        self._max_q = max_queue_batches
+        self._produced = 0
+        self._dequeued = 0
+        self._lock = threading.Lock()
+        self._threads = [
+            threading.Thread(target=self._produce, args=(p,), daemon=True)
+            for p in range(num_producers)
+        ]
+        self._started = False
+
+    # -------------------------------------------------------------- producers
+    def _produce(self, pid: int) -> None:
+        while not self._stop.is_set():
+            stall = self._stalls.get(pid)
+            if stall:
+                time.sleep(stall)
+                self._stalls.pop(pid, None)
+            # Backpressure on *unconsumed depth* (produced - consumed), NOT
+            # on live_nodes(): the CMP window retains ~W already-claimed
+            # nodes, which must not count against producer throttle.
+            if self._produced - self._dequeued > self._max_q:
+                time.sleep(0.0005)
+                continue
+            with self._lock:
+                bid = self._cursors[pid]
+                self._cursors[pid] = bid + self.num_producers
+            self.queue.enqueue(synth_batch(self.seed, bid, self.batch, self.seq, self.vocab))
+            self._produced += 1  # GIL-atomic enough for throttling
+
+    def stall_producer(self, pid: int, seconds: float) -> None:
+        self._stalls[pid] = seconds
+
+    # -------------------------------------------------------------- consumer
+    def start(self) -> "DataPipeline":
+        if not self._started:
+            for t in self._threads:
+                t.start()
+            self._started = True
+        return self
+
+    def __iter__(self) -> Iterator[Dict]:
+        self.start()
+        while not self._stop.is_set():
+            item = self.queue.dequeue()
+            if item is None:
+                time.sleep(0.0002)
+                continue
+            self._dequeued += 1
+            self._consumed[item["batch_id"] % self.num_producers] = item["batch_id"]
+            yield item
+
+    def next_batch(self) -> Dict:
+        return next(iter(self))
+
+    # -------------------------------------------------------------- state
+    def state(self) -> Dict:
+        """Exact-resume frontier: next id each producer should generate is
+        last-consumed + P (regenerating any dropped in-flight batches)."""
+        return {
+            "cursors": [self._consumed[p] + self.num_producers
+                        for p in range(self.num_producers)],
+            "seed": self.seed,
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict, **kw) -> "DataPipeline":
+        return cls(seed=state["seed"], start_cursors=state["cursors"],
+                   num_producers=len(state["cursors"]), **kw)
+
+    def close(self) -> None:
+        self._stop.set()

@@ -1,0 +1,129 @@
+"""Flash attention (causal, GQA, optional sliding window) as a Pallas TPU
+kernel.
+
+TPU adaptation (not a CUDA port): the grid's last dimension iterates
+*sequentially* on a TensorCore, so the online-softmax running state (m, l,
+acc) lives in VMEM scratch carried across the K-block axis — no atomics, no
+shared-memory tile sync. Block shapes default to 128 (MXU-aligned); the
+K/V working set per step is one [block_k, head_dim] tile in VMEM.
+
+Layouts: q [B, H, S, hd]; k/v [B, KV, T, hd]. GQA maps query head h to KV
+head h // (H // KV) in the BlockSpec index_map (no KV replication in HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, sliding_window: int,
+                  block_q: int, block_k: int, true_s: int, true_t: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Skip fully-masked K blocks (beyond the causal diagonal / window).
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (ik * block_k <= iq * block_q + block_q - 1)
+    if sliding_window > 0:
+        run = run & ((iq * block_q) - (ik * block_k + block_k - 1) < sliding_window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [block_q, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [block_k, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+        mask = (k_pos < true_t) & (q_pos < true_s)
+        if causal:
+            mask = mask & (q_pos >= k_pos)
+        if sliding_window > 0:
+            mask = mask & (q_pos - k_pos < sliding_window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # [block_q, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        correction = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * correction + jax.lax.dot(p, v)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _out():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sliding_window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, S, hd]
+    k: jax.Array,  # [B, KV, T, hd]
+    v: jax.Array,  # [B, KV, T, hd]
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    rep = H // KV  # GQA r-major: query head h reads KV head h % KV
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    pad_q = (-S) % block_q
+    pad_k = (-T) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sp, Tp = S + pad_q, T + pad_k
+    grid = (B, H, Sp // block_q, Tp // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal,
+        sliding_window=sliding_window, block_q=block_q, block_k=block_k,
+        true_s=S, true_t=T,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h % KV, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h % KV, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),  # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

@@ -1,0 +1,45 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes in Python for correctness validation; on TPU the same calls compile
+to Mosaic. Model code calls these; layouts are adapted here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cmp_claim as _claim
+from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
+
+
+def _interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, sliding_window=0,
+                    block_q=128, block_k=128):
+    """Model layout: q [B, S, H, hd]; k/v [B, T, KV, hd] -> [B, S, H, hd]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    S = q.shape[1]
+    bq = min(block_q, max(16, 1 << (S - 1).bit_length()))
+    bk = min(block_k, bq)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal,
+                              sliding_window=sliding_window,
+                              block_q=bq, block_k=bk, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens):
+    """q [B, H, hd]; pages [P, KV, page, hd] -> [B, H, hd]."""
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                               interpret=_interpret())
+
+
+def claim(state, cycle, *, k):
+    """Fused earliest-claim: (new_state, ids). ids==N => invalid."""
+    return _claim.cmp_claim(state, cycle, k=k, interpret=_interpret())

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q, k, v, *, causal=True, sliding_window=0):
+    """q [B,H,S,hd]; k,v [B,KV,T,hd] -> [B,H,S,hd]."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    rep = H // KV
+    kx = jnp.tile(k, (1, rep, 1, 1))  # r-major GQA: head h -> kv h % KV
+    vx = jnp.tile(v, (1, rep, 1, 1))
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kx.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if sliding_window > 0:
+        mask = mask & (q_pos - k_pos < sliding_window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_paged_attention(q, k_pages, v_pages, block_tables, seq_lens):
+    """Decode attention over paged KV.
+
+    q [B, H, hd]; k/v_pages [P, KV, page, hd]; block_tables [B, pages_per_seq]
+    (entries index into P; -pad with 0 beyond seq); seq_lens [B].
+    """
+    B, H, hd = q.shape
+    P, KV, page, _ = k_pages.shape
+    pages_per_seq = block_tables.shape[1]
+    rep = H // KV
+    # gather each sequence's pages -> [B, KV, pages_per_seq*page, hd]
+    kg = k_pages[block_tables]  # [B, pps, KV, page, hd]
+    vg = v_pages[block_tables]
+    kg = jnp.moveaxis(kg, 2, 1).reshape(B, KV, pages_per_seq * page, hd)
+    vg = jnp.moveaxis(vg, 2, 1).reshape(B, KV, pages_per_seq * page, hd)
+    kg = jnp.tile(kg, (1, rep, 1, 1))  # r-major GQA
+    vg = jnp.tile(vg, (1, rep, 1, 1))
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32), kg.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    valid = jnp.arange(pages_per_seq * page)[None, :] < seq_lens[:, None]
+    s = jnp.where(valid[:, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", w, vg.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_claim(state, cycle, k, available=1, claimed=2):
+    """Claim the k earliest-cycle AVAILABLE slots. Returns (new_state, ids,
+    valid) — ids==n for invalid lanes (matches slotpool semantics)."""
+    n = state.shape[0]
+    key = jnp.where(state == available, cycle, jnp.iinfo(jnp.int32).max)
+    neg, ids = jax.lax.top_k(-key, k)
+    valid = neg != -jnp.iinfo(jnp.int32).max
+    ids = jnp.where(valid, ids, n).astype(jnp.int32)
+    new_state = state.at[ids].set(claimed, mode="drop")
+    return new_state, ids, valid

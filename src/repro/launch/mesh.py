@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods).
+
+    Axes: 'pod' carries only cross-pod gradient reduction; 'data' is
+    batch/FSDP; 'model' is TP/EP/sequence-sharding."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires >= n_data*n_model host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

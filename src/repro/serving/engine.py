@@ -1,0 +1,197 @@
+"""Continuous-batching serving engine.
+
+CMP end to end:
+  * admission — requests enter through a strict-FIFO :class:`CMPQueue`
+    (global arrival order across submitter threads = fairness, the paper's
+    strict-FIFO property doing real work);
+  * KV memory — pages from :class:`PagedKVPool`; finished/preempted requests
+    retire pages which recycle after the protection window W (no refcounts,
+    no sweep barrier);
+  * overload — if the pool runs dry the engine *preempts* the youngest
+    request (retires its pages, requeues it). Recovery is automatic: the
+    pages return to FREE after W steps. A stalled writer/reader can delay
+    nothing (bounded reclamation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cmp import CMPQueue
+from repro.models import model as M
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.paged_model import paged_forward
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    output: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 page_size: int = 16, num_pages: int = 64, window: int = 4,
+                 max_seq: int = 128):
+        assert all(k in ("dense", "moe") for k in cfg.block_pattern), \
+            "paged engine serves attention-based families"
+        self.cfg, self.params = cfg, params
+        self.max_batch, self.page_size, self.max_seq = max_batch, page_size, max_seq
+        self.pps = max_seq // page_size
+        self.pool = PagedKVPool(cfg, num_pages=num_pages, page_size=page_size,
+                                window=window)
+        # Reserve page 0 as the scratch target for inactive batch lanes
+        # (their masked decode writes land here, never on live pages).
+        scratch, ok = self.pool.alloc(1)
+        assert bool(ok.all()) and int(scratch[0]) == 0
+        self.queue = CMPQueue(window=max(64, window), reclaim_period=32)
+        self.step_count = 0
+        self._uid = itertools.count()
+        # active request table (host side)
+        self.active: List[Optional[Request]] = [None] * max_batch
+        self.block_tables = np.zeros((max_batch, self.pps), np.int32)
+        self.seq_lens = np.zeros((max_batch,), np.int32)
+        self.last_tok = np.zeros((max_batch,), np.int32)
+        self.completed: Dict[int, Request] = {}
+        self.pending = 0  # submitted - admitted (emptiness check w/o dequeue)
+        self._backlog: List[Request] = []  # head-of-line retries (keeps FIFO)
+        fwd = lambda p, t, kp, vp, bt, sl: paged_forward(p, t, cfg, kp, vp, bt, sl)
+        self._decode = jax.jit(fwd)
+        self._prefill = jax.jit(fwd)
+
+    # ---------------------------------------------------------------- client
+    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        uid = next(self._uid)
+        self.pending += 1
+        self.queue.enqueue(Request(uid, list(prompt), max_new_tokens))
+        return uid
+
+    def _next_request(self) -> Optional[Request]:
+        if self._backlog:
+            return self._backlog.pop(0)
+        req = self.queue.dequeue()
+        return req
+
+    # ---------------------------------------------------------------- pages
+    def _alloc_pages(self, n: int) -> Optional[np.ndarray]:
+        if n == 0:
+            return np.zeros((0,), np.int32)
+        ids, valid = self.pool.alloc(n)
+        ids, valid = np.asarray(ids), np.asarray(valid)
+        if not valid.all():
+            self.pool.retire(jnp.asarray(ids))  # return partial grab
+            return None
+        return ids
+
+    def _retire_request(self, lane: int) -> None:
+        used = (int(self.seq_lens[lane]) + self.page_size - 1) // self.page_size
+        if used > 0:
+            self.pool.retire(jnp.asarray(self.block_tables[lane, :used]))
+        self.block_tables[lane] = 0
+        self.seq_lens[lane] = 0
+        self.active[lane] = None
+
+    def _preempt_youngest(self) -> bool:
+        lanes = [i for i, r in enumerate(self.active) if r is not None]
+        if not lanes:
+            return False
+        lane = max(lanes, key=lambda i: self.active[i].uid)
+        req = self.active[lane]
+        req.preemptions += 1
+        req.output = []
+        self._retire_request(lane)
+        self.pending += 1
+        self.queue.enqueue(req)  # back of the FIFO
+        return True
+
+    # ---------------------------------------------------------------- sched
+    def _admit(self) -> None:
+        for lane in range(self.max_batch):
+            if self.active[lane] is not None:
+                continue
+            req = self._next_request()
+            if req is None:
+                return
+            self.pending -= 1
+            need = (len(req.prompt) + self.page_size - 1) // self.page_size
+            pages = self._alloc_pages(max(1, need))
+            while pages is None:
+                if not self._preempt_youngest():
+                    self._backlog.insert(0, req)  # retry at head (strict FIFO)
+                    self.pending += 1
+                    return
+                pages = self._alloc_pages(max(1, need))
+            self.active[lane] = req
+            self.block_tables[lane, :len(pages)] = pages
+            self.seq_lens[lane] = 0
+            # prefill: process the whole prompt at once
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            bt = jnp.asarray(self.block_tables[lane:lane + 1])
+            sl = jnp.zeros((1,), jnp.int32)
+            logits, self.pool.k_pages, self.pool.v_pages = self._prefill(
+                self.params, toks, self.pool.k_pages, self.pool.v_pages, bt, sl)
+            self.seq_lens[lane] = len(req.prompt)
+            self.last_tok[lane] = int(jnp.argmax(logits[0]))
+            req.output.append(int(self.last_tok[lane]))
+
+    def _grow_pages(self) -> None:
+        """Allocate a fresh page for any lane whose next token crosses a page
+        boundary (pool pressure triggers preemption, paper Alg 1 Phase 1)."""
+        for lane, req in enumerate(self.active):
+            if req is None:
+                continue
+            used = (int(self.seq_lens[lane]) + self.page_size - 1) // self.page_size
+            need = (int(self.seq_lens[lane]) + 1 + self.page_size - 1) // self.page_size
+            if need > used:
+                pages = self._alloc_pages(need - used)
+                while pages is None:
+                    if not self._preempt_youngest() or self.active[lane] is None:
+                        break
+                    pages = self._alloc_pages(need - used)
+                if pages is not None and self.active[lane] is not None:
+                    self.block_tables[lane, used:need] = pages
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> List[Request]:
+        """One engine iteration: tick window clock, reclaim, admit, decode."""
+        self.step_count += 1
+        self.pool.tick(self.step_count)
+        self._admit()
+        self._grow_pages()
+        lanes = [i for i, r in enumerate(self.active) if r is not None]
+        if not lanes:
+            return []
+        toks = jnp.asarray(self.last_tok[:, None])
+        logits, self.pool.k_pages, self.pool.v_pages = self._decode(
+            self.params, toks, self.pool.k_pages, self.pool.v_pages,
+            jnp.asarray(self.block_tables), jnp.asarray(self.seq_lens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        done = []
+        for lane in lanes:
+            req = self.active[lane]
+            self.seq_lens[lane] += 1
+            self.last_tok[lane] = nxt[lane]
+            req.output.append(int(nxt[lane]))
+            if (len(req.output) >= req.max_new_tokens
+                    or self.seq_lens[lane] + 1 >= self.max_seq):
+                done.append(req)
+                self.completed[req.uid] = req
+                self._retire_request(lane)
+        return done
+
+    def run_until_idle(self, max_steps: int = 1000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            self.step()
+            if all(r is None for r in self.active) and self.pending == 0:
+                break
+        return self.completed

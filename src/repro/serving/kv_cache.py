@@ -1,0 +1,68 @@
+"""Paged KV cache on the CMP slot pool.
+
+Pages are the queue nodes of the paper, transplanted (DESIGN.md §2):
+
+  * a page is produced (allocated) with a monotone cycle — type-stable pool,
+    never freed, only recycled;
+  * a finishing/preempted request *retires* its pages (AVAILABLE->CLAIMED);
+  * the engine's step counter is the cycle clock: each step unilaterally
+    publishes ``deque_cycle = step`` (monotone, no coordination), and retired
+    pages are reclaimed only when ``retire_cycle < step - W`` — so any decode
+    step, DMA, or cross-host read launched in the last W steps can never see
+    a recycled page (bounded-window UAF/ABA safety instead of refcounts).
+
+Replaces: reference-counted block pools (vLLM-style) which need atomic
+refcount traffic per block per step and stop-the-world compaction.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import slotpool as sp
+
+
+class PagedKVPool:
+    def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
+                 window: int, dtype=None):
+        self.cfg = cfg
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.window = window
+        r = cfg.pattern_repeats
+        n_attn = sum(1 for k in cfg.block_pattern if k in ("dense", "moe", "hymba"))
+        self.layers = r * n_attn
+        dt = dtype or jnp.dtype(cfg.dtype)
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        # [L, P, KV, page, hd] — stacked over attention layers
+        self.k_pages = jnp.zeros((self.layers, num_pages, kv, page_size, hd), dt)
+        self.v_pages = jnp.zeros((self.layers, num_pages, kv, page_size, hd), dt)
+        self.pool = sp.make(num_pages)
+
+    # ------------------------------------------------------------------
+    def tick(self, step: int) -> None:
+        """Unilateral monotone boundary publish + window reclamation."""
+        self.pool = sp.advance(self.pool, jnp.int32(step))
+        self.pool, _ = sp.reclaim_retired(self.pool, self.window)
+
+    def alloc(self, n: int) -> Tuple[jax.Array, jax.Array]:
+        """Allocate n pages (FREE -> AVAILABLE/live). Returns (ids, valid)."""
+        self.pool, ids, valid = sp.produce_with_reclaim(self.pool, n, self.window)
+        return ids, valid
+
+    def retire(self, ids: jax.Array) -> None:
+        """Request done/preempted: pages become reclamation candidates after
+        the window elapses. Never blocks; never coordinates."""
+        valid = ids < self.num_pages
+        self.pool = sp.claim_ids(self.pool, ids, valid)
+
+    def free_pages(self) -> int:
+        return sp.counts(self.pool)["free"]
+
+    def live_pages(self) -> int:
+        c = sp.counts(self.pool)
+        return c["available"] + c["claimed"]

@@ -1,0 +1,234 @@
+"""CMP queue semantics: FIFO, MPMC safety, bounded reclamation, stall
+recovery, atomic-op counts (paper §3.3/§3.5/§3.6/§3.7)."""
+
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import CMPQueue
+from repro.core.atomics import op_counts, reset_op_counts, set_chaos_hook
+from repro.core.baselines import MSQueue, MutexQueue, SegmentedQueue
+from repro.core.window import compute_window, max_reclaim_delay_cycles
+
+
+def test_fifo_single_thread():
+    q = CMPQueue(window=32, reclaim_period=8, min_batch=2)
+    for i in range(500):
+        q.enqueue(i)
+    assert [q.dequeue() for _ in range(500)] == list(range(500))
+    assert q.dequeue() is None
+
+
+def test_fifo_interleaved_enq_deq():
+    q = CMPQueue(window=16, reclaim_period=4, min_batch=1)
+    out = []
+    n = 0
+    for round_ in range(50):
+        for _ in range(random.Random(round_).randint(1, 10)):
+            q.enqueue(n)
+            n += 1
+        for _ in range(random.Random(round_ + 999).randint(0, 8)):
+            d = q.dequeue()
+            if d is not None:
+                out.append(d)
+    while (d := q.dequeue()) is not None:
+        out.append(d)
+    assert out == list(range(n))
+
+
+def test_mpmc_no_loss_no_duplication():
+    q = CMPQueue(window=128, reclaim_period=16, min_batch=4)
+    per, P, C = 1500, 4, 4
+    consumed, lock = [], threading.Lock()
+    done = threading.Event()
+
+    def prod(pid):
+        for i in range(per):
+            q.enqueue((pid, i))
+
+    def cons():
+        while not done.is_set():
+            d = q.dequeue()
+            if d is None:
+                time.sleep(0)
+                continue
+            with lock:
+                consumed.append(d)
+                if len(consumed) == per * P:
+                    done.set()
+
+    ts = [threading.Thread(target=prod, args=(p,)) for p in range(P)]
+    ts += [threading.Thread(target=cons) for _ in range(C)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    assert len(consumed) == per * P
+    assert len(set(consumed)) == per * P  # no duplicates
+    # NOTE: with C>1 the post-claim append order is not the claim
+    # linearization order, so FIFO is asserted in the 1-consumer test below.
+
+
+def test_mpmc_single_consumer_fifo():
+    """Multi-producer, ONE consumer: observed order == claim order, so the
+    per-producer FIFO (earliest-claim) invariant is directly checkable."""
+    q = CMPQueue(window=128, reclaim_period=16, min_batch=4)
+    per, P = 2000, 4
+    consumed = []
+
+    def prod(pid):
+        for i in range(per):
+            q.enqueue((pid, i))
+
+    ts = [threading.Thread(target=prod, args=(p,)) for p in range(P)]
+    for t in ts:
+        t.start()
+    while len(consumed) < per * P:
+        d = q.dequeue()
+        if d is not None:
+            consumed.append(d)
+    for t in ts:
+        t.join()
+    for p in range(P):
+        seq = [i for (pid, i) in consumed if pid == p]
+        assert seq == sorted(seq), f"producer {p} order violated"
+
+
+def test_reclamation_is_bounded():
+    """Nodes recycle within W + N cycles; memory stays bounded under churn."""
+    w, n = 64, 16
+    q = CMPQueue(window=w, reclaim_period=n, min_batch=1)
+    for i in range(5000):
+        q.enqueue(i)
+        assert q.dequeue() == i
+    # live list length must be O(W + N), not O(operations)
+    assert q.live_nodes() < w + 4 * n + 16
+    assert q.stats["reclaimed"] > 4000
+
+
+def test_stalled_consumer_does_not_block_reclamation():
+    """A thread that claimed a node then died delays nothing (paper §3.6)."""
+    q = CMPQueue(window=8, reclaim_period=4, min_batch=1)
+    q.enqueue("poison")
+    # simulate a consumer that claims and stalls forever: claim manually
+    node = q.head.load().next.load()
+    assert node.state.cas(1, 2)  # AVAILABLE -> CLAIMED, then "crash"
+    for i in range(200):
+        q.enqueue(i)
+        q.dequeue()
+    # the stalled node's slot was reclaimed once outside the window
+    assert q.live_nodes() < 64
+
+
+def test_window_protects_recent_nodes():
+    q = CMPQueue(window=1000, reclaim_period=1, min_batch=1)
+    for i in range(50):
+        q.enqueue(i)
+        q.dequeue()
+    # all 50 cycles are within the window: nothing may be reclaimed
+    assert q.stats["reclaimed"] == 0
+
+
+def test_atomic_op_counts_match_paper():
+    """Paper: enqueue 3-5 atomics, dequeue 4-9 in the common case."""
+    q = CMPQueue(window=64, reclaim_period=10**9)  # no reclaim noise
+    q.enqueue(0)  # warm the structure
+    q.dequeue()
+    reset_op_counts()
+    for i in range(100):
+        q.enqueue(i)
+    enq_ops = sum(op_counts().values()) / 100
+    reset_op_counts()
+    for _ in range(100):
+        q.dequeue()
+    deq_ops = sum(op_counts().values()) / 100
+    # pool get/put adds ~4 atomics; allow the paper range + pool overhead
+    assert enq_ops <= 5 + 4.5, enq_ops
+    assert deq_ops <= 9 + 4.5, deq_ops
+
+
+def test_chaos_interleaving_preserves_safety():
+    """Random delays at atomic boundaries: still no loss/duplication."""
+    rng = random.Random(0)
+
+    def hook(kind):
+        if rng.random() < 0.01:
+            time.sleep(0.0001)
+
+    set_chaos_hook(hook)
+    try:
+        q = CMPQueue(window=32, reclaim_period=8, min_batch=2)
+        consumed, lock = [], threading.Lock()
+        per, P = 300, 3
+        done = threading.Event()
+
+        def prod(pid):
+            for i in range(per):
+                q.enqueue((pid, i))
+
+        def cons():
+            while not done.is_set():
+                d = q.dequeue()
+                if d is None:
+                    continue
+                with lock:
+                    consumed.append(d)
+                    if len(consumed) == per * P:
+                        done.set()
+
+        ts = [threading.Thread(target=prod, args=(p,)) for p in range(P)]
+        ts += [threading.Thread(target=cons) for _ in range(3)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=120)
+        assert len(consumed) == per * P and len(set(consumed)) == per * P
+    finally:
+        set_chaos_hook(None)
+
+
+def test_window_sizing_formula():
+    assert compute_window(1e6, 0.001) == 1000
+    assert compute_window(100, 0.001) == 64  # MIN_WINDOW floor
+    assert max_reclaim_delay_cycles(1000, 64) == 1064
+
+
+@pytest.mark.parametrize("cls", [MSQueue, SegmentedQueue, MutexQueue])
+def test_baselines_basic(cls):
+    q = cls()
+    for i in range(200):
+        q.enqueue(i)
+    out = [q.dequeue() for _ in range(200)]
+    assert sorted(x for x in out if x is not None) == list(range(200))
+    assert q.dequeue() is None
+
+
+def test_ms_queue_strict_fifo():
+    q = MSQueue()
+    for i in range(100):
+        q.enqueue(i)
+    assert [q.dequeue() for _ in range(100)] == list(range(100))
+
+
+def test_hazard_pointer_scan_cost_scales_with_threads():
+    """The O(P x K) coordination CMP eliminates: HP scan comparisons grow
+    linearly with registered threads."""
+    q = MSQueue(scan_threshold=8)
+    costs = {}
+    for nthreads in (2, 8):
+        qq = MSQueue(scan_threshold=8)
+
+        def work():
+            for i in range(200):
+                qq.enqueue(i)
+                qq.dequeue()
+
+        ts = [threading.Thread(target=work) for _ in range(nthreads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        costs[nthreads] = qq.hp.stats["scan_comparisons"] / max(1, qq.hp.stats["scans"])
+    assert costs[8] > costs[2] * 2.5  # ~4x slots -> ~4x comparisons per scan

@@ -1,0 +1,63 @@
+"""Data pipeline: determinism, exact resume, straggler tolerance, bounded
+queue memory (the CMP window at the input layer)."""
+
+import time
+
+import numpy as np
+
+from repro.data.pipeline import DataPipeline, synth_batch
+
+
+def test_batch_content_is_pure_function_of_id():
+    a = synth_batch(7, 42, 4, 32, 1000)
+    b = synth_batch(7, 42, 4, 32, 1000)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    c = synth_batch(7, 43, 4, 32, 1000)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_delivers_and_resumes():
+    pipe = DataPipeline(batch=2, seq=16, vocab=500, num_producers=2, window=16)
+    it = iter(pipe)
+    seen = [next(it)["batch_id"] for _ in range(10)]
+    state = pipe.state()
+    pipe.close()
+    assert len(set(seen)) == 10
+    # resume: new pipeline starts at the saved frontier; regenerated ids do
+    # not regress below the consumed frontier per producer
+    pipe2 = DataPipeline.from_state(state, batch=2, seq=16, vocab=500, window=16)
+    it2 = iter(pipe2)
+    seen2 = [next(it2)["batch_id"] for _ in range(6)]
+    pipe2.close()
+    per_prod_max = {}
+    for bid in seen:
+        p = bid % 2
+        per_prod_max[p] = max(per_prod_max.get(p, -1), bid)
+    for bid in seen2:
+        assert bid > per_prod_max.get(bid % 2, -1) - 2 * 2, (
+            "resumed pipeline re-delivered far-past batches")
+
+
+def test_stalled_producer_does_not_block_consumer():
+    pipe = DataPipeline(batch=2, seq=8, vocab=100, num_producers=2, window=8)
+    pipe.start()
+    time.sleep(0.05)
+    pipe.stall_producer(0, seconds=0.5)  # producer 0 stalls
+    it = iter(pipe)
+    t0 = time.time()
+    got = [next(it)["batch_id"] for _ in range(8)]
+    elapsed = time.time() - t0
+    pipe.close()
+    assert elapsed < 0.5, "consumer was blocked by the stalled producer"
+    assert len(got) == 8
+
+
+def test_queue_memory_is_bounded():
+    pipe = DataPipeline(batch=1, seq=8, vocab=100, num_producers=2,
+                        window=8, max_queue_batches=12)
+    pipe.start()
+    time.sleep(0.3)  # producers run, consumer absent
+    live = pipe.queue.live_nodes()
+    pipe.close()
+    # bounded by backpressure + window, not by elapsed time
+    assert live < 12 + 8 + 16, f"unbounded queue growth: {live} nodes"

@@ -1,0 +1,112 @@
+"""Pipeline parallelism on CMP-windowed buffers: schedule validity, window
+enforcement, and numerical equivalence with non-pipelined training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.pipeline import PipelineRunner, max_in_flight, one_f_one_b
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_1f1b_schedule_is_complete_and_ordered():
+    for num_stages, num_micro in [(2, 4), (4, 8), (3, 3), (4, 2)]:
+        ticks = one_f_one_b(num_stages, num_micro)
+        fwd_seen = {s: [] for s in range(num_stages)}
+        bwd_seen = {s: [] for s in range(num_stages)}
+        for t in ticks:
+            (fwd_seen if t.kind == "fwd" else bwd_seen)[t.stage].append(t.microbatch)
+        for s in range(num_stages):
+            assert fwd_seen[s] == list(range(num_micro)), (num_stages, num_micro, s)
+            assert bwd_seen[s] == list(range(num_micro))
+        # dataflow order: stage s fwd of micro m appears after stage s-1's
+        pos = {(t.kind, t.stage, t.microbatch): i for i, t in enumerate(ticks)}
+        for s in range(1, num_stages):
+            for m in range(num_micro):
+                assert pos[("fwd", s, m)] > pos[("fwd", s - 1, m)]
+                assert pos[("bwd", s - 1, m)] > pos[("bwd", s, m)]
+        # the window is bounded by pipeline depth
+        assert max_in_flight(ticks, num_stages) <= min(num_stages, num_micro) + 1
+
+
+def _mk_stages(num_stages, d, key):
+    ws = [jax.random.normal(jax.random.fold_in(key, i), (d, d)) * 0.3
+          for i in range(num_stages)]
+
+    def stage(i):
+        def f(x, p=None):
+            w = ws[i] if p is None else p
+            return jnp.tanh(x @ w)
+        return f
+
+    return ws, [stage(i) for i in range(num_stages)]
+
+
+def test_forward_pipeline_matches_sequential():
+    d, num_stages, num_micro = 8, 3, 5
+    ws, fns = _mk_stages(num_stages, d, KEY)
+    mb = [jax.random.normal(jax.random.fold_in(KEY, 100 + m), (2, d))
+          for m in range(num_micro)]
+    runner = PipelineRunner([lambda x, f=f: f(x) for f in fns], num_micro)
+    outs = runner.forward(mb)
+    for m in range(num_micro):
+        ref = mb[m]
+        for f in fns:
+            ref = f(ref)
+        np.testing.assert_allclose(np.asarray(outs[m]), np.asarray(ref),
+                                   atol=1e-6)
+    assert runner.stats["fwd"] == num_stages * num_micro
+    assert runner.stats["reclaimed"] > 0  # buffers actually recycled
+    # peak live buffers bounded by window + slack, not by num_micro
+    assert runner.stats["peak_slots"] <= runner.window + 2
+
+
+def test_train_grads_match_non_pipelined():
+    d, num_stages, num_micro = 6, 3, 4
+    ws, _ = _mk_stages(num_stages, d, KEY)
+
+    def stage_fn(i):
+        return lambda x, p: jnp.tanh(x @ p)
+
+    def loss_fn(y):
+        return jnp.mean(y ** 2)
+
+    mb = [jax.random.normal(jax.random.fold_in(KEY, 200 + m), (2, d))
+          for m in range(num_micro)]
+    runner = PipelineRunner([stage_fn(i) for i in range(num_stages)], num_micro)
+    grads, loss = runner.train_grads(ws, mb, loss_fn)
+
+    def full_loss(params):
+        tot = 0.0
+        for x in mb:
+            for p in params:
+                x = jnp.tanh(x @ p)
+            tot = tot + loss_fn(x)
+        return tot  # sum over microbatches (grads accumulate by sum)
+
+    ref_grads = jax.grad(full_loss)(ws)
+    for g, r in zip(grads, ref_grads):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   atol=1e-5, rtol=1e-5)
+    assert runner.stats["bwd"] == num_stages * num_micro
+
+
+def test_window_violation_is_caught():
+    """Consuming a buffer after the window slid past it raises (the UAF the
+    CMP window prevents is *detected*, not silently read)."""
+    d = 4
+    fns = [lambda x: x + 1, lambda x: x * 2]
+    runner = PipelineRunner([lambda x, f=f: f(x) for f in fns], num_micro=2)
+    runner._produce(0, 0, jnp.zeros((1, d)))
+    runner._produce(0, 1, jnp.ones((1, d)))
+    runner._consume(0, 0)
+    # force the window far forward: everything claimed becomes reclaimable
+    import repro.core.slotpool as sp
+    runner.pools[0] = sp.advance(runner.pools[0], runner.pools[0].enq_cycle + 100)
+    runner.pools[0], _ = sp.reclaim_retired(runner.pools[0], 0)
+    # slot of micro 0 was recycled; re-reading it must be caught
+    with pytest.raises(AssertionError, match="UAF"):
+        runner.slot_of[0][0] = runner.slot_of[0][0]  # same slot
+        runner._consume(0, 0)

@@ -1,0 +1,141 @@
+"""Serving engine: paged decode correctness, FIFO admission, preemption
+recovery via the CMP window, page-pool accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serving.engine import Engine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _ref_generate(cfg, params, prompt, n):
+    cache = init_cache(cfg, 1, 256)
+    lg, cache = prefill(params, jnp.asarray([prompt], jnp.int32), cfg, cache)
+    out = [int(jnp.argmax(lg[0]))]
+    for _ in range(n - 1):
+        lg, cache = decode_step(params, jnp.asarray([[out[-1]]], jnp.int32), cfg, cache)
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_config("yi_6b", smoke=True)
+    return cfg, init_params(cfg, KEY)
+
+
+def test_engine_matches_reference(dense_model):
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=2, page_size=8, num_pages=32,
+                 window=2, max_seq=64)
+    prompts = [[5, 17, 200, 3], [9, 9, 42], [100, 2, 7, 7, 1], [11] * 9]
+    uids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    done = eng.run_until_idle()
+    for p, u in zip(prompts, uids):
+        assert done[u].output == _ref_generate(cfg, params, p, 5)
+
+
+def test_engine_moe(dense_model):
+    cfg = get_config("granite_moe", smoke=True)
+    params = init_params(cfg, KEY)
+    eng = Engine(cfg, params, max_batch=2, page_size=8, num_pages=16,
+                 window=2, max_seq=32)
+    u = eng.submit([3, 1, 4, 1, 5], max_new_tokens=4)
+    done = eng.run_until_idle()
+    assert done[u].output == _ref_generate(cfg, params, [3, 1, 4, 1, 5], 4)
+
+
+def test_fifo_admission_order(dense_model):
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=1, page_size=8, num_pages=32,
+                 window=1, max_seq=32)
+    uids = [eng.submit([i + 1, i + 2], max_new_tokens=2) for i in range(5)]
+    completion_order = []
+    seen = set()
+    for _ in range(200):
+        eng.step()
+        for u in eng.completed:
+            if u not in seen:
+                seen.add(u)
+                completion_order.append(u)
+        if len(seen) == 5:
+            break
+    assert completion_order == uids  # strict FIFO service with max_batch=1
+
+
+def test_preemption_recovers_and_completes(dense_model):
+    """Pool too small for all requests: engine preempts, pages recycle after
+    the window, everything still completes with correct outputs."""
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=3, page_size=4, num_pages=10,
+                 window=2, max_seq=24)
+    prompts = [[5, 17, 200, 3], [9, 9, 42], [100, 2, 7, 7, 1]]
+    uids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    done = eng.run_until_idle(max_steps=400)
+    assert set(done) >= set(uids), "not all requests completed"
+    for p, u in zip(prompts, uids):
+        assert done[u].output == _ref_generate(cfg, params, p, 6)
+
+
+def test_pages_recycle_after_window(dense_model):
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=2, page_size=8, num_pages=16,
+                 window=3, max_seq=32)
+    eng.submit([1, 2, 3], max_new_tokens=3)
+    eng.run_until_idle()
+    used_after_done = eng.pool.free_pages()
+    for _ in range(eng.pool.window + 2):
+        eng.step()
+    # all pages except the reserved scratch page are FREE again
+    assert eng.pool.free_pages() == eng.pool.num_pages - 1
+    assert eng.pool.free_pages() >= used_after_done
+
+
+def test_engine_rejects_ssm_archs():
+    cfg = get_config("xlstm_125m", smoke=True)
+    params = init_params(cfg, KEY)
+    with pytest.raises(AssertionError):
+        Engine(cfg, params)
+
+
+def test_concurrent_submitters_strict_fifo(dense_model):
+    """The admission queue is the paper's queue: multiple submitter threads,
+    strict global FIFO service order (max_batch=1 makes order observable)."""
+    import threading
+    import time
+
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=1, page_size=8, num_pages=32,
+                 window=2, max_seq=32)
+    submitted = []
+    lock = threading.Lock()
+
+    def submitter(tid):
+        for i in range(3):
+            with lock:  # serialize just the uid recording, not the queue
+                uid = eng.submit([tid * 10 + i + 1, 2, 3], max_new_tokens=2)
+                submitted.append(uid)
+            time.sleep(0.001)
+
+    ts = [threading.Thread(target=submitter, args=(t,)) for t in range(3)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    completion = []
+    seen = set()
+    for _ in range(400):
+        eng.step()
+        for u in eng.completed:
+            if u not in seen:
+                seen.add(u)
+                completion.append(u)
+        if len(seen) == len(submitted):
+            break
+    # service order == global arrival order across submitter threads
+    assert completion == submitted

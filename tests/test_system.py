@@ -1,0 +1,61 @@
+"""End-to-end behaviour: training converges through the full stack (CMP data
+pipeline -> train loop -> checkpointing) and the serving engine answers
+batched requests through the CMP paged-KV path."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataPipeline
+from repro.models import init_params
+from repro.serving.engine import Engine
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import Trainer
+
+
+def test_train_loss_decreases_through_full_stack(tmp_path):
+    cfg = get_config("yi_6b", smoke=True)
+    opt = OptConfig(lr=2e-3, warmup_steps=3, total_steps=100)
+    pipe = DataPipeline(batch=4, seq=32, vocab=cfg.vocab_size,
+                        num_producers=2, window=16)
+    tr = Trainer(cfg, opt, ckpt_dir=str(tmp_path), ckpt_every=10)
+    res = tr.fit(iter(pipe), 25, data_pipe=pipe)
+    pipe.close()
+    first = sum(tr.history[:5]) / 5
+    last = sum(tr.history[-5:]) / 5
+    assert last < first - 0.2, f"loss did not decrease: {first} -> {last}"
+    assert res["ckpt_dropped"] == 0 or res["ckpt_dropped"] < 3
+
+
+def test_serving_end_to_end():
+    cfg = get_config("glm4_9b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    eng = Engine(cfg, params, max_batch=4, page_size=8, num_pages=64,
+                 window=4, max_seq=64)
+    uids = [eng.submit([i + 1, (i * 7) % 50 + 1, 3], max_new_tokens=4)
+            for i in range(8)]
+    done = eng.run_until_idle()
+    assert set(done) == set(uids)
+    for u in uids:
+        assert len(done[u].output) == 4
+        assert all(0 <= t < cfg.vocab_size for t in done[u].output)
+
+
+def test_train_then_serve_same_params(tmp_path):
+    """The checkpoint written by training serves correctly."""
+    from repro.checkpoint import checkpointer as C
+    cfg = get_config("yi_6b", smoke=True)
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    pipe = DataPipeline(batch=2, seq=16, vocab=cfg.vocab_size,
+                        num_producers=1, window=8)
+    tr = Trainer(cfg, opt, ckpt_dir=str(tmp_path), ckpt_every=5)
+    tr.fit(iter(pipe), 6, data_pipe=pipe)
+    pipe.close()
+    step, state = C.restore(str(tmp_path),
+                            {"params": tr.params, "opt_state": tr.opt_state,
+                             "data_state": pipe.state()})
+    eng = Engine(cfg, jax.tree_util.tree_map(jnp.asarray, state["params"]),
+                 max_batch=2, page_size=8, num_pages=32, window=2, max_seq=48)
+    u = eng.submit([1, 2, 3], max_new_tokens=3)
+    done = eng.run_until_idle()
+    assert len(done[u].output) == 3
