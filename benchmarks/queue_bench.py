@@ -117,6 +117,81 @@ def latency_run(kind: str, producers: int, consumers: int, samples: int = 2000) 
     }
 
 
+def _enqueue_chunk(q, items) -> None:
+    """Batched enqueue when the queue supports it (CMP), scalar loop otherwise."""
+    if hasattr(q, "enqueue_many"):
+        q.enqueue_many(items)
+    else:
+        for x in items:
+            q.enqueue(x)
+
+
+def _dequeue_chunk(q, k: int) -> List:
+    if hasattr(q, "dequeue_many"):
+        return q.dequeue_many(k)
+    out = []
+    for _ in range(k):
+        d = q.dequeue()
+        if d is None:
+            break
+        out.append(d)
+    return out
+
+
+def batched_atomic_op_run(kind: str, ops: int = 2000, batch: int = 32) -> Dict:
+    """Atomic operations per enqueue/dequeue through the *batched* path
+    (enqueue_many/dequeue_many where available — one cycle-range fetch-add,
+    one splice, one boundary publish per batch). Baselines without native
+    batched ops fall back to the scalar loop, so their numbers show what the
+    amortization is worth."""
+    q = make_queue(kind)
+    q.enqueue(0)
+    q.dequeue()
+    native = hasattr(q, "enqueue_many") and hasattr(q, "dequeue_many")
+    reset_op_counts()
+    for s in range(0, ops, batch):
+        _enqueue_chunk(q, list(range(s, s + batch)))
+    enq_counts = op_counts()
+    enq = sum(enq_counts.values()) / ops
+    enq_rmw = (enq_counts.get("cas", 0) + enq_counts.get("faa", 0)) / ops
+    reset_op_counts()
+    got = 0
+    while got < ops:
+        chunk = _dequeue_chunk(q, batch)
+        if not chunk:
+            break
+        got += len(chunk)
+    deq_counts = op_counts()
+    deq = sum(deq_counts.values()) / max(1, got)
+    deq_rmw = (deq_counts.get("cas", 0) + deq_counts.get("faa", 0)) / max(1, got)
+    return {"kind": kind, "batch": batch, "native_batched": native,
+            "atomics_per_enq": enq, "atomics_per_deq": deq,
+            "rmw_per_enq": enq_rmw, "rmw_per_deq": deq_rmw}
+
+
+def single_thread_throughput(kind: str, total: int = 20000,
+                             batch: int = 1) -> Dict:
+    """Scheduler-free items/sec: one thread alternating enqueue/dequeue in
+    chunks of ``batch`` (batch=1 => scalar path)."""
+    q = make_queue(kind)
+    q.enqueue(0)
+    q.dequeue()
+    t0 = time.perf_counter()
+    done = 0
+    while done < total:
+        n = min(batch, total - done)
+        if batch == 1:
+            q.enqueue(done)
+            q.dequeue()
+        else:
+            _enqueue_chunk(q, list(range(done, done + n)))
+            _dequeue_chunk(q, n)
+        done += n
+    dt = time.perf_counter() - t0
+    return {"kind": kind, "batch": batch, "items_per_sec": total / dt,
+            "seconds": dt}
+
+
 def atomic_op_run(kind: str, ops: int = 2000) -> Dict:
     """Atomic operations per enqueue/dequeue (scheduler-independent; paper
     §3.3: 3-5 enq, §3.5: 4-9 deq for CMP)."""

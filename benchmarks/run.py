@@ -180,6 +180,73 @@ def bench_device(full: bool) -> None:
           f"B={B},ctx={pps*page}")
 
 
+def bench_engine(full: bool) -> None:
+    """Engine-step microbenchmark: steps/sec of the vectorized scheduler
+    (device-resident lane tables, one batched dequeue per admit, one batched
+    page grow per step) on a smoke model."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.engine import Engine
+
+    cfg = get_config("yi_6b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=4, page_size=8, num_pages=64,
+                 window=4, max_seq=64)
+    eng.submit_many([[i + 1, i + 2, i + 3] for i in range(4)],
+                    max_new_tokens=10**6)  # keep lanes saturated
+    eng.step()  # warm the decode jit
+    iters = 60 if not full else 300
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        eng.step()
+    dt = (time.perf_counter() - t0) / iters
+    _emit("engine/step", dt * 1e6,
+          f"steps_per_sec={1.0/dt:.1f},lanes=4,decode_toks_per_sec={4.0/dt:.0f}")
+
+
+def bench_quick(out_path: str = "BENCH_queue.json") -> None:
+    """--quick: scalar-vs-batched throughput + atomics-per-op for all four
+    queue kinds, written to BENCH_queue.json so the bench trajectory is
+    tracked PR over PR."""
+    from benchmarks.queue_bench import (QUEUES, atomic_op_run,
+                                        batched_atomic_op_run,
+                                        single_thread_throughput)
+    result = {}
+    for kind in QUEUES:
+        scalar_ops = atomic_op_run(kind, ops=2000)
+        batched_ops = batched_atomic_op_run(kind, ops=2000, batch=32)
+        scalar_thr = single_thread_throughput(kind, total=20000, batch=1)
+        batched_thr = single_thread_throughput(kind, total=20000, batch=32)
+        result[kind] = {
+            "scalar": {
+                "atomics_per_enq": scalar_ops["atomics_per_enq"],
+                "atomics_per_deq": scalar_ops["atomics_per_deq"],
+                "rmw_per_enq": scalar_ops["rmw_per_enq"],
+                "rmw_per_deq": scalar_ops["rmw_per_deq"],
+                "items_per_sec": scalar_thr["items_per_sec"],
+            },
+            "batched": {
+                "batch": batched_ops["batch"],
+                "native_batched": batched_ops["native_batched"],
+                "atomics_per_enq": batched_ops["atomics_per_enq"],
+                "atomics_per_deq": batched_ops["atomics_per_deq"],
+                "rmw_per_enq": batched_ops["rmw_per_enq"],
+                "rmw_per_deq": batched_ops["rmw_per_deq"],
+                "items_per_sec": batched_thr["items_per_sec"],
+            },
+        }
+        _emit(f"quick/{kind}/scalar", 1e6 / scalar_thr["items_per_sec"],
+              f"atomics_enq={scalar_ops['atomics_per_enq']:.1f},"
+              f"atomics_deq={scalar_ops['atomics_per_deq']:.1f}")
+        _emit(f"quick/{kind}/batched", 1e6 / batched_thr["items_per_sec"],
+              f"atomics_enq={batched_ops['atomics_per_enq']:.1f},"
+              f"atomics_deq={batched_ops['atomics_per_deq']:.1f}")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {out_path}", file=sys.stderr)
+
+
 SECTIONS = {
     "fig1": bench_fig1_throughput,
     "tab13": bench_tab13_latency,
@@ -188,6 +255,7 @@ SECTIONS = {
     "ops": bench_atomic_ops,
     "cursor": bench_cursor_fix,
     "dev": bench_device,
+    "engine": bench_engine,
 }
 
 
@@ -196,10 +264,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale thread counts (slow on 1 core)")
     ap.add_argument("--only", default=None, help="comma-separated sections")
+    ap.add_argument("--quick", action="store_true",
+                    help="scalar-vs-batched queue snapshot -> BENCH_queue.json")
     args = ap.parse_args()
     os.makedirs("reports", exist_ok=True)
-    only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
+    if args.quick:
+        bench_quick()
+        return
+    only = set(args.only.split(",")) if args.only else None
     for name, fn in SECTIONS.items():
         if only and name not in only:
             continue

@@ -1,6 +1,11 @@
 """Cyclic Memory Protection (CMP) queue — faithful implementation of the paper's
 Algorithms 1 (enqueue), 3 (dequeue) and 4 (coordination-free reclamation).
 
+This is the *host* embodiment of the unified protection domain
+(:mod:`repro.core.domain`, DESIGN.md §1-2): state constants, window
+arithmetic and the reclamation predicate are imported from there — the device
+slot pool and the paged KV pool share the exact same definitions.
+
 Properties implemented exactly as in the paper:
 
 * strict global FIFO (append-only linking + cursor minimality + earliest claim),
@@ -14,6 +19,12 @@ Properties implemented exactly as in the paper:
   a time, batched head advancement, stalled-thread tolerance (a CLAIMED node
   from a dead thread is reclaimed after at most W further dequeue cycles).
 
+Beyond the paper (DESIGN.md §3): batched ``enqueue_many``/``dequeue_many``
+amortize the per-operation atomics — one cycle-range fetch-add and one linked
+splice per enqueue batch, one boundary publish and one cursor advance per
+dequeue batch — the amortization move bounded-memory designs like wCQ/SCQ use
+to earn their throughput.
+
 The Michael & Scott *helping* mechanism is deliberately absent (paper §3.4):
 on observing a stale tail the enqueuer retries with fresh state instead of
 CAS-ing the tail forward from a stale observation.
@@ -22,14 +33,16 @@ CAS-ing the tail forward from a stale observation.
 from __future__ import annotations
 
 import threading
-from typing import Any, List, Optional
+from typing import Any, Iterable, List, Optional
 
 from repro.core.atomics import AtomicCell, cpu_pause
-from repro.core.window import compute_window
-
-# Node states.
-AVAILABLE = 1
-CLAIMED = 2
+from repro.core.domain import (
+    AVAILABLE,
+    CLAIMED,
+    compute_window,
+    reclaim_enqueue_mask,
+    safe_cycle,
+)
 
 _RETRY_PAUSE_THRESHOLD = 3  # paper Alg 1 line 17
 
@@ -54,10 +67,17 @@ class Node:
 class NodePool:
     """Type-stable node pool: a Treiber stack of recycled nodes. Nodes are
     never returned to the OS; pool underflow allocates fresh nodes (unbounded
-    capacity). ``next`` is reused as the free-list link."""
+    capacity). ``next`` is reused as the free-list link.
+
+    The top is a *version-tagged* pointer ``(head, version)`` — the classic
+    counted-pointer fix: every successful push/pop installs a fresh tag, so
+    a stale observation can never CAS successfully (no ABA), which is what
+    makes the multi-node walk of ``get_many`` safe. ``get_many``/``put_many``
+    move a whole chain with a single CAS — the free-list half of the
+    batched-op amortization (DESIGN.md §3)."""
 
     def __init__(self, prealloc: int = 0):
-        self._top = AtomicCell(None)
+        self._top = AtomicCell((None, 0))  # (head node, monotone version)
         self.allocated = 0  # total Nodes ever constructed (monotone)
         self._alloc_lock = threading.Lock()
         for _ in range(prealloc):
@@ -71,23 +91,59 @@ class NodePool:
     def get(self) -> Node:
         while True:
             top = self._top.load()
-            if top is None:
+            head, ver = top
+            if head is None:
                 return self._fresh()
-            nxt = top.next.load()
-            if self._top.cas(top, nxt):
-                top.next.store(None)
-                return top
+            nxt = head.next.load()
+            if self._top.cas(top, (nxt, ver + 1)):
+                head.next.store(None)
+                return head
 
     def put(self, node: Node) -> None:
         while True:
             top = self._top.load()
-            node.next.store(top)
-            if self._top.cas(top, node):
+            node.next.store(top[0])
+            if self._top.cas(top, (node, top[1] + 1)):
+                return
+
+    def get_many(self, n: int) -> List[Node]:
+        """Pop up to ``n`` recycled nodes with one CAS per attempt (walk the
+        chain, CAS the tagged top past it — the tag makes the walk ABA-safe);
+        underflow allocates fresh nodes."""
+        got: List[Node] = []
+        while len(got) < n:
+            top = self._top.load()
+            head, ver = top
+            if head is None:
+                break
+            chain: List[Node] = []
+            cur: Optional[Node] = head
+            while cur is not None and len(chain) < n - len(got):
+                chain.append(cur)
+                cur = cur.next.load()
+            if self._top.cas(top, (cur, ver + 1)):
+                for nd in chain:
+                    nd.next.store(None)
+                got.extend(chain)
+        while len(got) < n:
+            got.append(self._fresh())
+        return got
+
+    def put_many(self, nodes: List[Node]) -> None:
+        """Push a privately-linked chain with a single CAS."""
+        if not nodes:
+            return
+        for a, b in zip(nodes, nodes[1:]):
+            a.next.store(b)
+        while True:
+            top = self._top.load()
+            nodes[-1].next.store(top[0])
+            if self._top.cas(top, (nodes[0], top[1] + 1)):
                 return
 
     def size(self) -> int:
         """O(n) free-list length (diagnostics only)."""
-        n, cur = 0, self._top.load()
+        n, cur = 0, self._top.load()[0]
         while cur is not None:
             n += 1
             cur = cur.next.load()
@@ -99,7 +155,7 @@ class CMPQueue:
 
     Args:
       window: protection window W (cycles). If None, derived via
-        ``compute_window(ops_per_sec, resilience_s)``.
+        ``domain.compute_window(ops_per_sec, resilience_s)``.
       reclaim_period: N — reclamation trigger every N enqueues.
       min_batch: MIN_BATCH_SIZE for batched reclamation.
       prealloc: nodes to pre-populate the type-stable pool with.
@@ -119,14 +175,14 @@ class CMPQueue:
         self.window = int(window) if window is not None else compute_window(ops_per_sec, resilience_s)
         self.reclaim_period = int(reclaim_period)
         self.min_batch = int(min_batch)
-        # Beyond-paper fix (EXPERIMENTS.md §Perf host iteration): the paper's
-        # Alg 3 Phase 4 advances scan_cursor only to current.next, so when
-        # the claimed node is the tail (next == NULL) the cursor stays put
-        # and strict-alternation workloads re-walk the whole retained window
-        # (O(W) per dequeue, measured 583us at W=1000). Advancing to the
-        # claimed node itself preserves cursor minimality (everything at or
-        # before it is non-AVAILABLE) and restores O(1). Set False for the
-        # paper-faithful behavior.
+        # Beyond-paper fix (DESIGN.md §5): the paper's Alg 3 Phase 4 advances
+        # scan_cursor only to current.next, so when the claimed node is the
+        # tail (next == NULL) the cursor stays put and strict-alternation
+        # workloads re-walk the whole retained window (O(W) per dequeue,
+        # measured 583us at W=1000). Advancing to the claimed node itself
+        # preserves cursor minimality (everything at or before it is
+        # non-AVAILABLE) and restores O(1). Set False for the paper-faithful
+        # behavior.
         self.cursor_to_claimed = bool(cursor_to_claimed)
         self.pool = NodePool(prealloc)
 
@@ -158,6 +214,44 @@ class CMPQueue:
         node.cycle = cycle  # immutable from here on
 
         # Phase 2: lock-free insertion (M&S minus helping).
+        self._splice(node, node)
+
+        # Phase 3: conditional reclamation (deterministic modulo policy).
+        if cycle % self.reclaim_period == 0:
+            self.reclaim()
+        return True
+
+    def enqueue_many(self, items: Iterable[Any]) -> int:
+        """Batched enqueue (DESIGN.md §3): one cycle-range fetch-add and one
+        linked splice for the whole batch instead of per item. The batch is
+        pre-linked locally, so readers observe it fully formed the instant
+        the single tail CAS lands. Returns the number of items enqueued."""
+        batch = list(items)
+        if not batch:
+            return 0
+        if any(d is None for d in batch):
+            raise ValueError("CMPQueue payloads must be non-None (None marks empty slots)")
+        n = len(batch)
+        nodes = self.pool.get_many(n)
+        # Phase 1 (batched): one fetch-add reserves the cycle range
+        # [base+1, base+n]; cycles stay immutable and monotone.
+        base = self.cycle.fetch_add(n)
+        for i, (node, data) in enumerate(zip(nodes, batch)):
+            node.data.store(data)
+            node.cycle = base + 1 + i
+            node.next.store(nodes[i + 1] if i + 1 < n else None)
+            node.state.store(AVAILABLE)
+
+        # Phase 2: one splice publishes the whole chain.
+        self._splice(nodes[0], nodes[-1])
+
+        # Phase 3: reclaim once if the range crossed a trigger multiple.
+        if (base + n) // self.reclaim_period > base // self.reclaim_period:
+            self.reclaim()
+        return n
+
+    def _splice(self, first: Node, last: Node) -> None:
+        """Lock-free insertion of a pre-linked chain (M&S minus helping)."""
         retry_count = 0
         while True:
             tail = self.tail.load()
@@ -169,29 +263,38 @@ class CMPQueue:
                 if retry_count > _RETRY_PAUSE_THRESHOLD:
                     cpu_pause()
                 continue
-            if tail.next.cas(None, node):
+            if tail.next.cas(None, first):
                 # Optional tail advancement; failure is benign.
-                self.tail.cas(tail, node)
-                break
+                self.tail.cas(tail, last)
+                return
             retry_count += 1
             self.stats["enq_retries"] += 1
-
-        # Phase 3: conditional reclamation (deterministic modulo policy).
-        if cycle % self.reclaim_period == 0:
-            self.reclaim()
-        return True
 
     # ------------------------------------------------------------------
     # Algorithm 3: lock-free dequeue
     # ------------------------------------------------------------------
     def dequeue(self) -> Optional[Any]:
+        out = self.dequeue_many(1)
+        return out[0] if out else None
+
+    def dequeue_many(self, k: int) -> List[Any]:
+        """Claim up to ``k`` items in FIFO order. For k == 1 this is exactly
+        the paper's Algorithm 3. For k > 1 the per-item work is only the
+        claim CASes (Phases 1-3); the scan-cursor advance (Phase 4) and the
+        monotone boundary publish (Phase 5) run once for the whole batch
+        (DESIGN.md §3)."""
+        out: List[Any] = []
+        if k <= 0:
+            return out
         current = self.head.load()  # non-NULL (dummy)
         last_deque_cycle = -1       # force initial cursor load
         last_cursor = current
         cursor_cycle = current.cycle
+        last_claimed: Optional[Node] = None
+        max_cycle = -1
 
         # Phases 1+2: scan-cursor load and atomic node claiming.
-        while current is not None:
+        while len(out) < k and current is not None:
             deque_cycle = self.deque_cycle.load()
             if deque_cycle != last_deque_cycle:
                 # Other threads progressed: re-accelerate from the cursor.
@@ -200,42 +303,50 @@ class CMPQueue:
                 last_cursor = current
                 cursor_cycle = last_cursor.cycle
             if current.state.cas(AVAILABLE, CLAIMED):
-                break
-            self.stats["deq_scans"] += 1
+                # Phase 3: claim data with CAS (guards vs stalled-thread ABA
+                # reuse). A lost race means the node was recycled underneath
+                # us while we stalled — its ``next`` is no longer trustworthy,
+                # so restart the scan instead of following a stale pointer.
+                if (current.state.load() == AVAILABLE
+                        or (data := current.data.load()) is None
+                        or not current.data.cas(data, None)):
+                    last_deque_cycle = -1  # force cursor re-acceleration
+                    current = self.head.load()
+                    continue
+                out.append(data)
+                last_claimed = current
+                if current.cycle > max_cycle:
+                    max_cycle = current.cycle
+                if len(out) >= k:
+                    break
+            else:
+                self.stats["deq_scans"] += 1
             current = current.next.load()
 
-        if current is None:
-            return None  # empty dequeue linearizes at cursor reaching null
-
-        # Phase 3: claim data with CAS (guards vs stalled-thread ABA reuse).
-        if current.state.load() == AVAILABLE:
-            return None  # node was recycled underneath us (we were stalled)
-        data = current.data.load()
-        if data is None or not current.data.cas(data, None):
-            return None
+        if last_claimed is None:
+            return out  # empty dequeue linearizes at cursor reaching null
 
         advance_boundary = True
-        # Phase 4: opportunistic scan-cursor advance (pointer+cycle dual check
-        # eliminates ABA: cycles are monotone, so a recycled same-address node
-        # can never satisfy both conditions).
+        # Phase 4 (once per batch): opportunistic scan-cursor advance
+        # (pointer+cycle dual check eliminates ABA: cycles are monotone, so a
+        # recycled same-address node can never satisfy both conditions).
+        # Everything at or before the last claimed node is non-AVAILABLE, so
+        # cursor minimality is preserved.
         sc = self.scan_cursor.load()
         if sc is last_cursor and cursor_cycle == sc.cycle:
-            nxt = current.next.load()
+            nxt = last_claimed.next.load()
             if nxt is None and self.cursor_to_claimed:
-                nxt = current  # tail claimed: park cursor on it (see __init__)
+                nxt = last_claimed  # tail claimed: park cursor on it (see __init__)
             advance_boundary = False
             if nxt is None or self.scan_cursor.cas(last_cursor, nxt):
                 advance_boundary = True
 
-        # Phase 5: protection boundary update (monotone max publish).
+        # Phase 5 (once per batch): protection boundary update — the domain's
+        # monotone max-publish, realized as an atomic fetch-max.
         if advance_boundary:
-            cyc = self.deque_cycle.load()
-            while cyc < current.cycle:
-                if self.deque_cycle.cas(cyc, current.cycle):
-                    break
-                cyc = self.deque_cycle.load()
+            self.deque_cycle.fetch_max(max_cycle)
 
-        return data
+        return out
 
     # ------------------------------------------------------------------
     # Algorithm 4: coordination-free memory reclamation
@@ -248,9 +359,8 @@ class CMPQueue:
         reclaimed = 0
         try:
             self.stats["reclaim_passes"] += 1
-            # Phase 1: protection boundary.
-            cycle = self.deque_cycle.load()
-            safe_cycle = max(0, cycle - self.window)
+            # Phase 1: protection boundary (domain.safe_cycle).
+            dc = self.deque_cycle.load()
             head = self.head.load()
             current = head.next.load()
 
@@ -258,12 +368,14 @@ class CMPQueue:
                 original_next = current
                 new_next = current
                 batch: List[Node] = []
-                # Phases 2-4: collect a batch of safely reclaimable nodes.
+                # Phases 2-4: collect a batch of safely reclaimable nodes —
+                # the domain predicate (state == CLAIMED) & (cycle < dc - W).
+                # The cycle is immutable (plain read); the state load is the
+                # atomic half of the check.
                 while current is not None:
-                    if current.cycle >= safe_cycle:
-                        break  # cycle-based protection (immutable, plain read)
-                    if current.state.load() == AVAILABLE:
-                        break  # state-based protection
+                    if not reclaim_enqueue_mask(current.state.load(),
+                                                current.cycle, dc, self.window):
+                        break
                     batch.append(current)
                     nxt = current.next.load()
                     new_next = nxt
@@ -272,12 +384,28 @@ class CMPQueue:
                     break
                 # Phase 5: single CAS advances head.next across the batch.
                 if head.next.cas(original_next, new_next):
+                    rescued: List[Any] = []
                     for node in batch:
+                        # Beyond-paper fix (DESIGN.md §5): a claimer that was
+                        # descheduled between its state CAS and its data CAS
+                        # still owns undelivered data here. The paper destroys
+                        # it (silent loss under a W-cycle stall); we steal it
+                        # with one CAS and re-publish it instead. The claimer's
+                        # own data CAS then fails and it rescans — exactly-once
+                        # either way, still coordination-free, memory still
+                        # bounded (the node is recycled regardless).
+                        d = node.data.load()
+                        if d is not None and node.data.cas(d, None):
+                            rescued.append(d)
                         # Terminate stale traversals, then recycle.
                         node.next.store(None)
                         node.data.store(None)
-                        self.pool.put(node)
+                    self.pool.put_many(batch)
                     reclaimed += len(batch)
+                    if rescued:
+                        # Re-enqueue at the tail (the nested reclaim trigger
+                        # no-ops on the _reclaiming guard we hold).
+                        self.enqueue_many(rescued)
                 else:
                     break  # concurrent modification: abandon, retry later
         finally:
@@ -299,7 +427,6 @@ class CMPQueue:
     def snapshot_invariants(self) -> dict:
         """Checked by tests: window safety + cursor minimality (quiesced)."""
         dc = self.deque_cycle.load()
-        safe = max(0, dc - self.window)
         head = self.head.load()
         cur = head.next.load()
         min_linked_cycle = None
@@ -309,7 +436,21 @@ class CMPQueue:
             cur = cur.next.load()
         return {
             "deque_cycle": dc,
-            "safe_cycle": safe,
+            "safe_cycle": safe_cycle(dc, self.window),
             "min_linked_cycle": min_linked_cycle,
             "enq_cycle": self.cycle.load(),
         }
+
+    def check_quiesced(self) -> None:
+        """Run the domain's quiesced invariant checker over the linked list
+        (the host analogue of ``slotpool.check_invariants``)."""
+        from repro.core import domain
+
+        states, cycles = [], []
+        cur = self.head.load().next.load()
+        while cur is not None:
+            states.append(cur.state.load())
+            cycles.append(cur.cycle)
+            cur = cur.next.load()
+        domain.check_quiesced(states, cycles, self.cycle.load(),
+                              self.deque_cycle.load(), self.window)

@@ -1,11 +1,14 @@
 """Device-side CMP: a cyclic slot pool as a pure-functional JAX structure.
 
-This is the TPU-native embodiment of the paper's mechanism (DESIGN.md §2).
-TPU SPMD has no CAS and no intra-step races, so the paper's *claim CAS*
-becomes a deterministic earliest-cycle selection computed with vector ops,
-while everything else carries over exactly:
+This is the TPU-native embodiment of the unified protection domain
+(:mod:`repro.core.domain`, DESIGN.md §2) — state constants, window math and
+both reclamation predicates are imported from there, so the host queue and
+this pool provably share one protocol. TPU SPMD has no CAS and no intra-step
+races, so the paper's *claim CAS* becomes a deterministic earliest-cycle
+selection computed by the tiled Pallas kernel (:mod:`repro.kernels.cmp_claim`
+via :mod:`repro.kernels.ops`), while everything else carries over exactly:
 
-* two-state lifecycle  FREE -> AVAILABLE -> CLAIMED -> (window) -> FREE,
+* three-state lifecycle  FREE -> AVAILABLE -> CLAIMED -> (window) -> FREE,
 * immutable monotone ``cycle`` assigned when a slot becomes AVAILABLE,
 * monotone ``deque_cycle`` published by claims (fetch-max, coordination-free),
 * reclamation predicate  (state == CLAIMED) & (cycle < deque_cycle - W).
@@ -14,7 +17,7 @@ Concurrency on device exists *between* asynchronous actors (decode steps in
 flight, host prefetch, checkpoint writers); the window invariant — not CAS —
 is what makes reuse safe there, exactly the paper's argument.
 
-Two reclamation predicates are provided:
+Two reclamation predicates are provided (both defined in the domain core):
 
 * ``reclaim``         — the paper's: enqueue-cycle vs window (FIFO lifetimes:
                         MoE capacity slots, microbatch buffers).
@@ -35,9 +38,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-FREE = 0
-AVAILABLE = 1
-CLAIMED = 2
+from repro.core import domain
+from repro.core.domain import AVAILABLE, CLAIMED, FREE
 
 _INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -97,23 +99,21 @@ def produce(pool: SlotPool, k: int) -> Tuple[SlotPool, jax.Array, jax.Array]:
 def claim(pool: SlotPool, k: int) -> Tuple[SlotPool, jax.Array, jax.Array]:
     """Claim up to ``k`` earliest-cycle AVAILABLE slots (strict FIFO).
 
-    The earliest-claim property (paper §3.7 FIFO invariant 3) is realized as a
-    deterministic min-cycle selection; ``deque_cycle`` is advanced by a
-    monotone max-publish exactly as in dequeue Phase 5.
+    The earliest-claim property (paper §3.7 FIFO invariant 3) is realized by
+    the tiled Pallas claim kernel (block-local k-way min + cross-block merge,
+    :func:`repro.kernels.ops.claim`), which fuses the selection with the
+    AVAILABLE -> CLAIMED transition; ``deque_cycle`` is then advanced by the
+    domain's monotone max-publish exactly as in dequeue Phase 5.
     """
+    from repro.kernels import ops as kops  # deferred: kernels build on core
+
     n = pool.num_slots
-    key = jnp.where(pool.state == AVAILABLE, pool.cycle, _INT_MAX)
-    neg, ids = jax.lax.top_k(-key, min(k, n))
-    if k > n:
-        neg = jnp.concatenate([neg, jnp.full((k - n,), -_INT_MAX, neg.dtype)])
-        ids = jnp.concatenate([ids, jnp.full((k - n,), n, ids.dtype)])
-    valid = neg != -_INT_MAX
-    ids = jnp.where(valid, ids, n).astype(jnp.int32)
-    state = pool.state.at[ids].set(CLAIMED, mode="drop")
-    retire = pool.retire_cycle.at[ids].set(pool.deque_cycle, mode="drop")
-    claimed_max = jnp.max(jnp.where(valid, -neg, 0).astype(jnp.int32))
-    deque_cycle = jnp.maximum(pool.deque_cycle, claimed_max)  # fetch-max publish
-    retire = retire.at[ids].set(deque_cycle, mode="drop")
+    state, ids = kops.claim(pool.state, pool.cycle, k=k)
+    valid = ids < n
+    claimed_cycles = jnp.where(valid, pool.cycle[jnp.clip(ids, 0, n - 1)], 0)
+    claimed_max = jnp.max(claimed_cycles).astype(jnp.int32)
+    deque_cycle = domain.publish_boundary(pool.deque_cycle, claimed_max)
+    retire = pool.retire_cycle.at[ids].set(deque_cycle, mode="drop")
     return pool._replace(state=state, retire_cycle=retire, deque_cycle=deque_cycle), ids, valid
 
 
@@ -125,40 +125,43 @@ def claim_ids(pool: SlotPool, ids: jax.Array, valid: jax.Array) -> SlotPool:
     state = pool.state.at[ids].set(CLAIMED, mode="drop")
     retire = pool.retire_cycle.at[ids].set(pool.deque_cycle, mode="drop")
     claimed_max = jnp.max(jnp.where(valid, pool.cycle[jnp.clip(ids, 0, pool.num_slots - 1)], 0))
-    deque_cycle = jnp.maximum(pool.deque_cycle, claimed_max)
+    deque_cycle = domain.publish_boundary(pool.deque_cycle, claimed_max)
     return pool._replace(state=state, retire_cycle=retire, deque_cycle=deque_cycle)
 
 
 # ---------------------------------------------------------------------------
-# boundary publish + reclamation
+# boundary publish + reclamation (domain predicates)
 # ---------------------------------------------------------------------------
 
 
 @jax.jit
 def advance(pool: SlotPool, observed_cycle: jax.Array) -> SlotPool:
     """Unilateral monotone boundary publish (paper dequeue Phase 5)."""
-    return pool._replace(deque_cycle=jnp.maximum(pool.deque_cycle, observed_cycle))
+    return pool._replace(
+        deque_cycle=domain.publish_boundary(pool.deque_cycle, observed_cycle))
 
 
 @functools.partial(jax.jit, static_argnums=1)
 def reclaim(pool: SlotPool, window: int) -> Tuple[SlotPool, jax.Array]:
-    """Paper §3.6 predicate: (state == CLAIMED) & (cycle < deque_cycle - W).
+    """Paper §3.6 predicate (domain.reclaim_enqueue_mask):
+    (state == CLAIMED) & (cycle < deque_cycle - W).
 
     Returns (pool', num_reclaimed). Coordination-free: a pure function of
     locally observed state; AVAILABLE slots are absolutely protected.
     """
-    safe_cycle = jnp.maximum(0, pool.deque_cycle - window)
-    mask = (pool.state == CLAIMED) & (pool.cycle < safe_cycle)
+    mask = domain.reclaim_enqueue_mask(pool.state, pool.cycle,
+                                       pool.deque_cycle, window)
     state = jnp.where(mask, FREE, pool.state)
     return pool._replace(state=state), jnp.sum(mask.astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnums=1)
 def reclaim_retired(pool: SlotPool, window: int) -> Tuple[SlotPool, jax.Array]:
-    """Generalized predicate for non-FIFO lifetimes (paged KV blocks):
-    (state == CLAIMED) & (retire_cycle < deque_cycle - W)."""
-    safe_cycle = jnp.maximum(0, pool.deque_cycle - window)
-    mask = (pool.state == CLAIMED) & (pool.retire_cycle < safe_cycle)
+    """Generalized predicate for non-FIFO lifetimes (paged KV blocks,
+    domain.reclaim_retired_mask): (state == CLAIMED) & (retire_cycle <
+    deque_cycle - W)."""
+    mask = domain.reclaim_retired_mask(pool.state, pool.retire_cycle,
+                                       pool.deque_cycle, window)
     state = jnp.where(mask, FREE, pool.state)
     return pool._replace(state=state), jnp.sum(mask.astype(jnp.int32))
 
@@ -194,16 +197,8 @@ def counts(pool: SlotPool) -> dict:
 
 
 def check_invariants(pool: SlotPool, window: int) -> None:
-    """Raises AssertionError if any CMP invariant is violated."""
-    state = jax.device_get(pool.state)
-    cycle = jax.device_get(pool.cycle)
-    dc = int(pool.deque_cycle)
-    eq = int(pool.enq_cycle)
-    assert dc <= eq, f"deque_cycle {dc} ran ahead of enq_cycle {eq}"
-    avail = state == AVAILABLE
-    # AVAILABLE slots are inside-or-ahead of the window => absolutely protected.
-    if avail.any():
-        assert cycle[avail].max() <= eq
-    # cycles of AVAILABLE slots are unique (monotone assignment).
-    av_cycles = cycle[avail]
-    assert len(set(av_cycles.tolist())) == len(av_cycles), "duplicate live cycles"
+    """Raises AssertionError if any CMP invariant is violated (delegates to
+    the domain's quiesced checker shared with the host queue)."""
+    domain.check_quiesced(jax.device_get(pool.state),
+                          jax.device_get(pool.cycle),
+                          int(pool.enq_cycle), int(pool.deque_cycle), window)

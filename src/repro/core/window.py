@@ -1,41 +1,14 @@
-"""Protection-window sizing and invariant math (paper §3.1).
-
-    W = max(MIN_WINDOW, OPS x R)
-
-where OPS is the expected dequeue rate (ops/s) and R the resilience — the
-maximum tolerated stall of any consumer, in seconds.  Memory retained by the
-window is bounded by ``W x node_size`` regardless of queue capacity; a stalled
-or crashed participant can delay reclamation of at most W nodes and can never
-block progress (paper's bounded-reclamation guarantee).
-
-The same formula sizes every CMP embodiment in this framework:
-
-* host data-pipeline queue: OPS = batches/s consumed by the train loop,
-  R = tolerated producer/consumer stall (preemption, GC pause),
-* paged KV-cache block pool: OPS = decode steps/s, R = max request-preemption
-  latency before its blocks may be recycled,
-* async checkpoint buffers: OPS = checkpoint events/s, R = max writer lag.
-"""
+"""Deprecated shim — the window arithmetic lives in :mod:`repro.core.domain`
+(the unified protection-domain core, DESIGN.md §1). Import from there."""
 
 from __future__ import annotations
 
-MIN_WINDOW = 64
+from repro.core.domain import (  # noqa: F401  (re-exports)
+    MIN_WINDOW,
+    compute_window,
+    max_reclaim_delay_cycles,
+    retained_bytes,
+)
 
-
-def compute_window(ops_per_sec: float, resilience_s: float, min_window: int = MIN_WINDOW) -> int:
-    """W = max(MIN_WINDOW, OPS x R), rounded up to an integer cycle count."""
-    if ops_per_sec < 0 or resilience_s < 0:
-        raise ValueError("ops_per_sec and resilience_s must be non-negative")
-    w = int(ops_per_sec * resilience_s + 0.5)
-    return max(int(min_window), w)
-
-
-def retained_bytes(window: int, node_size_bytes: int) -> int:
-    """Upper bound on memory retained by the protection window."""
-    return int(window) * int(node_size_bytes)
-
-
-def max_reclaim_delay_cycles(window: int, gc_period: int) -> int:
-    """A CLAIMED node is recycled within at most W + N dequeue cycles
-    (window plus the conditional-reclamation trigger period)."""
-    return int(window) + int(gc_period)
+__all__ = ["MIN_WINDOW", "compute_window", "max_reclaim_delay_cycles",
+           "retained_bytes"]

@@ -48,15 +48,19 @@ class DataPipeline:
     def __init__(self, batch: int, seq: int, vocab: int, *, seed: int = 0,
                  num_producers: int = 2, window: int = 64,
                  start_cursors: Optional[List[int]] = None,
-                 max_queue_batches: int = 32):
+                 max_queue_batches: int = 32, enqueue_batch: int = 4):
         self.batch, self.seq, self.vocab, self.seed = batch, seq, vocab, seed
         self.num_producers = num_producers
+        self.enqueue_batch = max(1, int(enqueue_batch))
         self.queue = CMPQueue(window=window, reclaim_period=16, min_batch=2)
         self._cursors = list(start_cursors) if start_cursors else list(range(num_producers))
         self._consumed = dict((p, c - num_producers) for p, c in enumerate(self._cursors))
         self._stop = threading.Event()
         self._stalls: Dict[int, float] = {}
         self._max_q = max_queue_batches
+        # _produced/_dequeued/_stalls/_cursors/_consumed are all guarded by
+        # _lock: the backpressure check must not misread torn counter state
+        # under free-threaded builds.
         self._produced = 0
         self._dequeued = 0
         self._lock = threading.Lock()
@@ -69,24 +73,34 @@ class DataPipeline:
     # -------------------------------------------------------------- producers
     def _produce(self, pid: int) -> None:
         while not self._stop.is_set():
-            stall = self._stalls.get(pid)
+            with self._lock:
+                stall = self._stalls.pop(pid, None)
             if stall:
                 time.sleep(stall)
-                self._stalls.pop(pid, None)
             # Backpressure on *unconsumed depth* (produced - consumed), NOT
             # on live_nodes(): the CMP window retains ~W already-claimed
             # nodes, which must not count against producer throttle.
-            if self._produced - self._dequeued > self._max_q:
+            with self._lock:
+                depth = self._produced - self._dequeued
+            if depth > self._max_q:
                 time.sleep(0.0005)
                 continue
+            # Batched generation + one enqueue_many splice (DESIGN.md §3):
+            # the cycle-range fetch-add and tail CAS amortize over the batch.
+            n = min(self.enqueue_batch, max(1, self._max_q - depth + 1))
             with self._lock:
-                bid = self._cursors[pid]
-                self._cursors[pid] = bid + self.num_producers
-            self.queue.enqueue(synth_batch(self.seed, bid, self.batch, self.seq, self.vocab))
-            self._produced += 1  # GIL-atomic enough for throttling
+                bids = [self._cursors[pid] + j * self.num_producers
+                        for j in range(n)]
+                self._cursors[pid] = bids[-1] + self.num_producers
+            self.queue.enqueue_many(
+                synth_batch(self.seed, bid, self.batch, self.seq, self.vocab)
+                for bid in bids)
+            with self._lock:
+                self._produced += n
 
     def stall_producer(self, pid: int, seconds: float) -> None:
-        self._stalls[pid] = seconds
+        with self._lock:
+            self._stalls[pid] = seconds
 
     # -------------------------------------------------------------- consumer
     def start(self) -> "DataPipeline":
@@ -103,8 +117,9 @@ class DataPipeline:
             if item is None:
                 time.sleep(0.0002)
                 continue
-            self._dequeued += 1
-            self._consumed[item["batch_id"] % self.num_producers] = item["batch_id"]
+            with self._lock:
+                self._dequeued += 1
+                self._consumed[item["batch_id"] % self.num_producers] = item["batch_id"]
             yield item
 
     def next_batch(self) -> Dict:
@@ -114,11 +129,12 @@ class DataPipeline:
     def state(self) -> Dict:
         """Exact-resume frontier: next id each producer should generate is
         last-consumed + P (regenerating any dropped in-flight batches)."""
-        return {
-            "cursors": [self._consumed[p] + self.num_producers
-                        for p in range(self.num_producers)],
-            "seed": self.seed,
-        }
+        with self._lock:
+            return {
+                "cursors": [self._consumed[p] + self.num_producers
+                            for p in range(self.num_producers)],
+                "seed": self.seed,
+            }
 
     @classmethod
     def from_state(cls, state: Dict, **kw) -> "DataPipeline":

@@ -40,6 +40,9 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens):
                                interpret=_interpret())
 
 
-def claim(state, cycle, *, k):
-    """Fused earliest-claim: (new_state, ids). ids==N => invalid."""
-    return _claim.cmp_claim(state, cycle, k=k, interpret=_interpret())
+def claim(state, cycle, *, k, block_n=None):
+    """Fused earliest-claim: (new_state, ids). ids==N => invalid.
+    Pools larger than one VMEM block dispatch to the tiled grid kernel
+    (block-local k-way min + cross-block merge)."""
+    return _claim.cmp_claim(state, cycle, k=k, block_n=block_n,
+                            interpret=_interpret())

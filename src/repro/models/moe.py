@@ -21,6 +21,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.domain import window_admit
+
 
 def assign_slots(expert_ids: jax.Array, num_experts: int, capacity: int) -> Tuple[jax.Array, jax.Array]:
     """FIFO capacity-slot assignment.
@@ -40,7 +42,10 @@ def assign_slots(expert_ids: jax.Array, num_experts: int, capacity: int) -> Tupl
     starts = jnp.cumsum(cnt) - cnt  # exclusive prefix
     pos_sorted = jnp.arange(a, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
     pos = jnp.zeros((a,), jnp.int32).at[order].set(pos_sorted)
-    keep = pos < capacity
+    # Bounded capacity IS the protection window (domain.window_admit): the
+    # j-th claim on an expert is admitted iff j < C, exactly as a slot whose
+    # position fell outside the window is not.
+    keep = window_admit(pos, capacity)
     slot = jnp.where(keep, expert_ids * capacity + pos, e * capacity)
     return slot.astype(jnp.int32), keep
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import slotpool as sp
+from repro.core.domain import AVAILABLE, STATE_NAMES
 
 
 # ---------------------------------------------------------------------------
@@ -154,9 +155,9 @@ class PipelineRunner:
     def _consume(self, boundary: int, micro: int):
         slot = self.slot_of[boundary][micro]
         state = int(self.pools[boundary].state[slot])
-        assert state == sp.AVAILABLE, (
+        assert state == AVAILABLE, (
             f"UAF: microbatch {micro} buffer at boundary {boundary} was "
-            f"recycled (state={state}) — window violation")
+            f"recycled (state={STATE_NAMES.get(state, state)}) — window violation")
         value = self.buffers[boundary][slot]
         self.pools[boundary] = sp.claim_ids(
             self.pools[boundary], jnp.asarray([slot], jnp.int32),

@@ -3,7 +3,8 @@
 CMP end to end:
   * admission — requests enter through a strict-FIFO :class:`CMPQueue`
     (global arrival order across submitter threads = fairness, the paper's
-    strict-FIFO property doing real work);
+    strict-FIFO property doing real work); the scheduler drains it with one
+    batched ``dequeue_many`` per step instead of a dequeue per lane;
   * KV memory — pages from :class:`PagedKVPool`; finished/preempted requests
     retire pages which recycle after the protection window W (no refcounts,
     no sweep barrier);
@@ -11,6 +12,11 @@ CMP end to end:
     request (retires its pages, requeues it). Recovery is automatic: the
     pages return to FREE after W steps. A stalled writer/reader can delay
     nothing (bounded reclamation).
+
+The scheduler is vectorized: ``block_tables``/``seq_lens``/``last_tok`` live
+on device across steps (no numpy re-wrap per iteration), per-lane decode
+bookkeeping is array ops over the lane tables, page growth is one batched
+allocation per step, and prefill/decode share a single compiled callable.
 """
 
 from __future__ import annotations
@@ -25,7 +31,6 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cmp import CMPQueue
-from repro.models import model as M
 from repro.serving.kv_cache import PagedKVPool
 from repro.serving.paged_model import paged_forward
 
@@ -57,17 +62,19 @@ class Engine:
         self.queue = CMPQueue(window=max(64, window), reclaim_period=32)
         self.step_count = 0
         self._uid = itertools.count()
-        # active request table (host side)
+        # active request table (host side); lane tensors are device-resident
+        # across steps — the decode path never round-trips through numpy.
         self.active: List[Optional[Request]] = [None] * max_batch
-        self.block_tables = np.zeros((max_batch, self.pps), np.int32)
-        self.seq_lens = np.zeros((max_batch,), np.int32)
-        self.last_tok = np.zeros((max_batch,), np.int32)
+        self.block_tables = jnp.zeros((max_batch, self.pps), jnp.int32)
+        self.seq_lens = jnp.zeros((max_batch,), jnp.int32)
+        self.last_tok = jnp.zeros((max_batch,), jnp.int32)
         self.completed: Dict[int, Request] = {}
         self.pending = 0  # submitted - admitted (emptiness check w/o dequeue)
         self._backlog: List[Request] = []  # head-of-line retries (keeps FIFO)
-        fwd = lambda p, t, kp, vp, bt, sl: paged_forward(p, t, cfg, kp, vp, bt, sl)
-        self._decode = jax.jit(fwd)
-        self._prefill = jax.jit(fwd)
+        # Prefill and decode are the same function traced at different
+        # sequence lengths — one jit, one compilation cache.
+        self._forward = jax.jit(
+            lambda p, t, kp, vp, bt, sl: paged_forward(p, t, cfg, kp, vp, bt, sl))
 
     # ---------------------------------------------------------------- client
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
@@ -76,11 +83,13 @@ class Engine:
         self.queue.enqueue(Request(uid, list(prompt), max_new_tokens))
         return uid
 
-    def _next_request(self) -> Optional[Request]:
-        if self._backlog:
-            return self._backlog.pop(0)
-        req = self.queue.dequeue()
-        return req
+    def submit_many(self, prompts: List[List[int]], max_new_tokens: int = 16) -> List[int]:
+        """Batched admission enqueue: one cycle-range fetch-add + one splice
+        for the whole burst (CMPQueue.enqueue_many)."""
+        reqs = [Request(next(self._uid), list(p), max_new_tokens) for p in prompts]
+        self.pending += len(reqs)
+        self.queue.enqueue_many(reqs)
+        return [r.uid for r in reqs]
 
     # ---------------------------------------------------------------- pages
     def _alloc_pages(self, n: int) -> Optional[np.ndarray]:
@@ -96,9 +105,9 @@ class Engine:
     def _retire_request(self, lane: int) -> None:
         used = (int(self.seq_lens[lane]) + self.page_size - 1) // self.page_size
         if used > 0:
-            self.pool.retire(jnp.asarray(self.block_tables[lane, :used]))
-        self.block_tables[lane] = 0
-        self.seq_lens[lane] = 0
+            self.pool.retire(self.block_tables[lane, :used])
+        self.block_tables = self.block_tables.at[lane].set(0)
+        self.seq_lens = self.seq_lens.at[lane].set(0)
         self.active[lane] = None
 
     def _preempt_youngest(self) -> bool:
@@ -116,50 +125,80 @@ class Engine:
 
     # ---------------------------------------------------------------- sched
     def _admit(self) -> None:
-        for lane in range(self.max_batch):
-            if self.active[lane] is not None:
-                continue
-            req = self._next_request()
-            if req is None:
-                return
+        free = [i for i, r in enumerate(self.active) if r is None]
+        if not free:
+            return
+        # Head-of-line retries first, then ONE batched dequeue for the rest
+        # of the free lanes (amortized claim, strict FIFO preserved).
+        reqs = self._backlog[:len(free)]
+        del self._backlog[:len(reqs)]
+        if len(reqs) < len(free):
+            reqs.extend(self.queue.dequeue_many(len(free) - len(reqs)))
+        for idx, (lane, req) in enumerate(zip(free, reqs)):
             self.pending -= 1
             need = (len(req.prompt) + self.page_size - 1) // self.page_size
             pages = self._alloc_pages(max(1, need))
             while pages is None:
                 if not self._preempt_youngest():
-                    self._backlog.insert(0, req)  # retry at head (strict FIFO)
+                    # Pool dry, nothing to preempt: park this and every
+                    # not-yet-admitted request at the backlog head (FIFO).
+                    # Only the current request's pending decrement has run;
+                    # the rest still carry their submit-time count.
                     self.pending += 1
+                    self._backlog = reqs[idx:] + self._backlog
                     return
                 pages = self._alloc_pages(max(1, need))
             self.active[lane] = req
-            self.block_tables[lane, :len(pages)] = pages
-            self.seq_lens[lane] = 0
-            # prefill: process the whole prompt at once
+            self.block_tables = self.block_tables.at[lane, :len(pages)].set(
+                jnp.asarray(pages))
+            self.seq_lens = self.seq_lens.at[lane].set(0)
+            # prefill: process the whole prompt at once (same compiled
+            # callable as decode, traced at the prompt length)
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            bt = jnp.asarray(self.block_tables[lane:lane + 1])
+            bt = self.block_tables[lane:lane + 1]
             sl = jnp.zeros((1,), jnp.int32)
-            logits, self.pool.k_pages, self.pool.v_pages = self._prefill(
+            logits, self.pool.k_pages, self.pool.v_pages = self._forward(
                 self.params, toks, self.pool.k_pages, self.pool.v_pages, bt, sl)
-            self.seq_lens[lane] = len(req.prompt)
-            self.last_tok[lane] = int(jnp.argmax(logits[0]))
-            req.output.append(int(self.last_tok[lane]))
+            tok = int(jnp.argmax(logits[0]))
+            self.seq_lens = self.seq_lens.at[lane].set(len(req.prompt))
+            self.last_tok = self.last_tok.at[lane].set(tok)
+            req.output.append(tok)
 
     def _grow_pages(self) -> None:
-        """Allocate a fresh page for any lane whose next token crosses a page
-        boundary (pool pressure triggers preemption, paper Alg 1 Phase 1)."""
-        for lane, req in enumerate(self.active):
-            if req is None:
+        """Allocate fresh pages for every lane whose next token crosses a page
+        boundary — one batched allocation for all of them (pool pressure
+        triggers preemption, paper Alg 1 Phase 1)."""
+        sl = np.asarray(self.seq_lens)
+        used = -(-sl // self.page_size)
+        need = -(-(sl + 1) // self.page_size)
+        lanes = [i for i, r in enumerate(self.active)
+                 if r is not None and need[i] > used[i]]
+        if not lanes:
+            return
+        # Fast path: enough FREE pages for every growing lane -> one batched
+        # grab + one scatter. (Single scheduler thread: the check can't race.)
+        if self.pool.free_pages() >= len(lanes):
+            pages = self._alloc_pages(len(lanes))
+            if pages is not None:
+                rows = jnp.asarray(lanes, jnp.int32)
+                cols = jnp.asarray(used[lanes], jnp.int32)
+                self.block_tables = self.block_tables.at[rows, cols].set(
+                    jnp.asarray(pages))
+                return
+        # Pool pressure: grow lane by lane (earliest lane first) so partial
+        # availability is used instead of burned, preempting as needed; a
+        # lane preempted out from under us is skipped.
+        for lane in lanes:
+            if self.active[lane] is None:
                 continue
-            used = (int(self.seq_lens[lane]) + self.page_size - 1) // self.page_size
-            need = (int(self.seq_lens[lane]) + 1 + self.page_size - 1) // self.page_size
-            if need > used:
-                pages = self._alloc_pages(need - used)
-                while pages is None:
-                    if not self._preempt_youngest() or self.active[lane] is None:
-                        break
-                    pages = self._alloc_pages(need - used)
-                if pages is not None and self.active[lane] is not None:
-                    self.block_tables[lane, used:need] = pages
+            page = self._alloc_pages(1)
+            while page is None:
+                if not self._preempt_youngest() or self.active[lane] is None:
+                    break
+                page = self._alloc_pages(1)
+            if page is not None and self.active[lane] is not None:
+                self.block_tables = self.block_tables.at[
+                    lane, int(used[lane])].set(int(page[0]))
 
     # ---------------------------------------------------------------- step
     def step(self) -> List[Request]:
@@ -168,25 +207,29 @@ class Engine:
         self.pool.tick(self.step_count)
         self._admit()
         self._grow_pages()
-        lanes = [i for i, r in enumerate(self.active) if r is not None]
-        if not lanes:
+        active_np = np.array([r is not None for r in self.active])
+        if not active_np.any():
             return []
-        toks = jnp.asarray(self.last_tok[:, None])
-        logits, self.pool.k_pages, self.pool.v_pages = self._decode(
-            self.params, toks, self.pool.k_pages, self.pool.v_pages,
-            jnp.asarray(self.block_tables), jnp.asarray(self.seq_lens))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        # Decode all lanes in one call on the device-resident tables.
+        logits, self.pool.k_pages, self.pool.v_pages = self._forward(
+            self.params, self.last_tok[:, None], self.pool.k_pages,
+            self.pool.v_pages, self.block_tables, self.seq_lens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        mask = jnp.asarray(active_np)
+        self.seq_lens = self.seq_lens + mask.astype(jnp.int32)
+        self.last_tok = jnp.where(mask, nxt, self.last_tok)
+        # single host sync per step for completion bookkeeping
+        nxt_np = np.asarray(nxt)
+        sl_np = np.asarray(self.seq_lens)
         done = []
-        for lane in lanes:
+        for lane in np.nonzero(active_np)[0]:
             req = self.active[lane]
-            self.seq_lens[lane] += 1
-            self.last_tok[lane] = nxt[lane]
-            req.output.append(int(nxt[lane]))
+            req.output.append(int(nxt_np[lane]))
             if (len(req.output) >= req.max_new_tokens
-                    or self.seq_lens[lane] + 1 >= self.max_seq):
+                    or sl_np[lane] + 1 >= self.max_seq):
                 done.append(req)
                 self.completed[req.uid] = req
-                self._retire_request(lane)
+                self._retire_request(int(lane))
         return done
 
     def run_until_idle(self, max_steps: int = 1000) -> Dict[int, Request]:

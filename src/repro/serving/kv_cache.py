@@ -1,15 +1,18 @@
 """Paged KV cache on the CMP slot pool.
 
-Pages are the queue nodes of the paper, transplanted (DESIGN.md §2):
+Pages are the queue nodes of the paper, transplanted (DESIGN.md §2) — the
+third embodiment of the unified protection domain
+(:mod:`repro.core.domain`):
 
   * a page is produced (allocated) with a monotone cycle — type-stable pool,
     never freed, only recycled;
   * a finishing/preempted request *retires* its pages (AVAILABLE->CLAIMED);
   * the engine's step counter is the cycle clock: each step unilaterally
     publishes ``deque_cycle = step`` (monotone, no coordination), and retired
-    pages are reclaimed only when ``retire_cycle < step - W`` — so any decode
-    step, DMA, or cross-host read launched in the last W steps can never see
-    a recycled page (bounded-window UAF/ABA safety instead of refcounts).
+    pages are reclaimed only when ``retire_cycle < step - W``
+    (``domain.reclaim_retired_mask``) — so any decode step, DMA, or
+    cross-host read launched in the last W steps can never see a recycled
+    page (bounded-window UAF/ABA safety instead of refcounts).
 
 Replaces: reference-counted block pools (vLLM-style) which need atomic
 refcount traffic per block per step and stop-the-world compaction.
@@ -17,22 +20,35 @@ refcount traffic per block per step and stop-the-world compaction.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import slotpool as sp
+from repro.core.domain import (
+    AVAILABLE,
+    CLAIMED,
+    FREE,
+    compute_window,
+    reclaim_retired_mask,
+    safe_cycle,
+)
 
 
 class PagedKVPool:
     def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
-                 window: int, dtype=None):
+                 window: Optional[int] = None, dtype=None,
+                 steps_per_sec: float = 100.0, resilience_s: float = 0.1):
         self.cfg = cfg
         self.page_size = page_size
         self.num_pages = num_pages
-        self.window = window
+        # Window sizing is the domain formula W = max(MIN_WINDOW, OPS x R)
+        # with OPS = decode steps/s and R = max request-preemption latency
+        # before its blocks may be recycled (DESIGN.md §2).
+        self.window = int(window) if window is not None else compute_window(
+            steps_per_sec, resilience_s)
         r = cfg.pattern_repeats
         n_attn = sum(1 for k in cfg.block_pattern if k in ("dense", "moe", "hymba"))
         self.layers = r * n_attn
@@ -60,9 +76,21 @@ class PagedKVPool:
         valid = ids < self.num_pages
         self.pool = sp.claim_ids(self.pool, ids, valid)
 
+    # ------------------------------------------------------------------
     def free_pages(self) -> int:
-        return sp.counts(self.pool)["free"]
+        return int(jnp.sum(self.pool.state == FREE))
 
     def live_pages(self) -> int:
-        c = sp.counts(self.pool)
-        return c["available"] + c["claimed"]
+        return int(jnp.sum((self.pool.state == AVAILABLE)
+                           | (self.pool.state == CLAIMED)))
+
+    def reclaimable_pages(self) -> int:
+        """Pages whose retire cycle fell behind the window — exactly the
+        domain predicate the next ``tick`` will recycle."""
+        return int(jnp.sum(reclaim_retired_mask(
+            self.pool.state, self.pool.retire_cycle,
+            self.pool.deque_cycle, self.window)))
+
+    def protection_boundary(self) -> int:
+        """Current safe cycle max(0, deque_cycle - W) (diagnostics)."""
+        return int(safe_cycle(int(self.pool.deque_cycle), self.window))

@@ -105,3 +105,73 @@ def test_model_ref_matches_pallas_attention():
     a = self_attention(q, k, v, impl="ref")
     b = self_attention(q, k, v, impl="pallas")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiled claim kernel: pools spanning multiple grid blocks (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k,block_n", [
+    (300, 7, 128),    # 3 blocks, ragged tail
+    (257, 4, 64),     # 5 blocks, tail of 1
+    (1024, 16, 256),  # exact multiple
+    (129, 3, 128),    # 2 blocks, minimal spill
+])
+def test_claim_kernel_tiled_matches_ref(n, k, block_n):
+    rng = np.random.default_rng(n * 7 + k)
+    state = jnp.asarray(rng.choice([0, 1, 2], size=n).astype(np.int32))
+    cycle = jnp.asarray(rng.permutation(n).astype(np.int32))
+    ns, ids = ops.claim(state, cycle, k=k, block_n=block_n)
+    rs, rids, _ = ref_claim(state, cycle, k)
+    assert np.array_equal(np.asarray(ns), np.asarray(rs))
+    assert np.array_equal(np.asarray(ids), np.asarray(rids))
+
+
+@pytest.mark.parametrize("n,k", [(384, 5), (500, 9)])
+def test_claim_kernel_tiled_matches_fused(n, k):
+    """Tiled grid path == single-block fused path (interpret mode) on the
+    same input: the cross-block merge is exact, not approximate."""
+    rng = np.random.default_rng(n + k)
+    state = jnp.asarray(rng.choice([0, 1, 2], size=n).astype(np.int32))
+    cycle = jnp.asarray(rng.permutation(n).astype(np.int32))
+    ns_t, ids_t = ops.claim(state, cycle, k=k, block_n=128)   # 3-4 blocks
+    ns_f, ids_f = ops.claim(state, cycle, k=k, block_n=n)     # single block
+    assert np.array_equal(np.asarray(ns_t), np.asarray(ns_f))
+    assert np.array_equal(np.asarray(ids_t), np.asarray(ids_f))
+
+
+def test_claim_kernel_tiled_sparse_and_empty_blocks():
+    """Blocks with zero AVAILABLE slots must not contribute candidates."""
+    n, k, bn = 512, 6, 128
+    state = np.zeros(n, np.int32)
+    state[130] = 1   # block 1
+    state[400] = 1   # block 3
+    cycle = np.arange(n, dtype=np.int32)
+    ns, ids = ops.claim(jnp.asarray(state), jnp.asarray(cycle), k=k, block_n=bn)
+    got = np.asarray(ids)
+    assert got[0] == 130 and got[1] == 400
+    assert np.all(got[2:] == n)  # only two claimable slots exist
+    assert np.asarray(ns)[130] == 2 and np.asarray(ns)[400] == 2
+
+
+def test_claim_kernel_tiled_ties_break_by_lowest_id():
+    """Equal cycles across different blocks: lowest slot id wins, exactly as
+    lax.top_k and the fused cascade break ties."""
+    n, bn = 256, 64
+    state = np.ones(n, np.int32)
+    cycle = np.full(n, 5, np.int32)  # all tied
+    ns, ids = ops.claim(jnp.asarray(state), jnp.asarray(cycle), k=4, block_n=bn)
+    assert np.asarray(ids).tolist() == [0, 1, 2, 3]
+
+
+def test_slotpool_claim_dispatches_to_tiled_kernel():
+    """slotpool.claim goes through kernels/ops.py for pools larger than one
+    block and still claims the earliest cycles with a correct boundary."""
+    from repro.core import slotpool as sp
+    pool = sp.make(3000)  # > default block (2048) => tiled path
+    pool, _, _ = sp.produce(pool, 12)
+    pool, ids, valid = sp.claim(pool, 5)
+    assert np.asarray(ids).tolist() == [0, 1, 2, 3, 4]
+    assert bool(np.asarray(valid).all())
+    assert int(pool.deque_cycle) == 5  # monotone max-publish of claimed cycles

@@ -139,3 +139,22 @@ def test_concurrent_submitters_strict_fifo(dense_model):
             break
     # service order == global arrival order across submitter threads
     assert completion == submitted
+
+
+def test_overload_burst_drains_pending_counter(dense_model):
+    """Batched admission under a pool too small for the burst: every request
+    still completes AND the pending counter drains to exactly zero (the
+    park-at-backlog path must not double-count)."""
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=3, page_size=4, num_pages=8,
+                 window=2, max_seq=16)
+    uids = eng.submit_many([[i + 1, i + 2] for i in range(7)],
+                           max_new_tokens=3)
+    done = eng.run_until_idle(max_steps=300)
+    assert set(done) >= set(uids)
+    assert eng.pending == 0
+    assert all(r is None for r in eng.active)
+    # idle detection must actually fire (pending leak would burn max_steps)
+    before = eng.step_count
+    eng.run_until_idle(max_steps=50)
+    assert eng.step_count == before + 1  # one probe step, then idle exit

@@ -3,7 +3,10 @@ the paper's invariants hold for every operation sequence."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import slotpool as sp
 from repro.kernels import ops as kops
