@@ -1,0 +1,150 @@
+"""Scheduler-fabric benchmarks (DESIGN.md §8): per-class admission latency
+for a 3-class mixed workload under each drain policy, and shard work-stealing
+throughput/idle-time.
+
+Sized for the 1-core container; the shapes (policy separation, steal win)
+are scheduling properties, not hardware ones.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+from repro.sched import QueueClass, Scheduler, ShardConsumer, ShardSet
+
+
+def _pctl(xs: List[float], p: float) -> float:
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(p / 100.0 * (len(s) - 1))))]
+
+
+def mixed_workload_latency(policy: str, *, waves: int = 30,
+                           per_wave: Dict[str, int] = None,
+                           drain_k: int = 8, service_s: float = 0.001
+                           ) -> Dict:
+    """3-class mixed workload under *sustained* arrival: every wave submits a
+    burst per class, then the scheduler drains one admission batch and pays
+    ``service_s`` of simulated engine-step service; leftover backlog drains
+    after the arrival phase. Admission latency is measured per item from
+    submit to policy delivery — the quantity the policies trade off across
+    classes (interactive arrivals exactly fill drain_k, so strict priority
+    starves the lower classes while arrivals last; weighted-fair gives every
+    class its share throughout)."""
+    per_wave = per_wave or {"interactive": 8, "batch": 12, "background": 12}
+    classes = [
+        QueueClass("interactive", priority=2, weight=8.0, num_shards=2,
+                   window=4096),
+        QueueClass("batch", priority=1, weight=3.0, num_shards=2, window=4096),
+        QueueClass("background", priority=0, weight=1.0, num_shards=2,
+                   window=4096),
+    ]
+    sched = Scheduler(classes, policy=policy)
+    lat: Dict[str, List[float]] = {n: [] for n in per_wave}
+
+    def drain_once() -> int:
+        batch = sched.drain(drain_k)
+        now = time.monotonic()
+        for qc, env in batch:
+            lat[qc.name].append((now - env.t_submit) * 1e3)
+        if batch:
+            time.sleep(service_s)  # simulated engine-step service time
+        return len(batch)
+
+    t0 = time.perf_counter()
+    for w in range(waves):
+        for name, n in per_wave.items():
+            sched.submit_many(name, [(name, w, j) for j in range(n)])
+        drain_once()
+    while drain_once() > 0:  # drain the accumulated backlog
+        pass
+    wall = time.perf_counter() - t0
+
+    out = {"policy": policy, "waves": waves, "drain_k": drain_k,
+           "service_ms": service_s * 1e3, "wall_s": wall, "classes": {}}
+    for name, xs in lat.items():
+        out["classes"][name] = {
+            "n": len(xs),
+            "p50_ms": _pctl(xs, 50),
+            "p99_ms": _pctl(xs, 99),
+        }
+    return out
+
+
+def steal_throughput(*, num_shards: int = 4, items: int = 4000,
+                     skew_shard0: float = 0.9, workers: int = 4,
+                     stealing: bool = True) -> Dict:
+    """Skewed shard load drained by per-shard workers. With stealing off a
+    worker only ever drains its home shard (idle once it empties); with
+    stealing on, an idle worker claims from the deepest sibling — the claim
+    CAS is the entire mechanism. Reports drain wall time, idle-poll fraction
+    and steal volume."""
+    shards = ShardSet(num_shards, window=2048)
+    per4 = max(1, int(1.0 / (1.0 - skew_shard0 + 1e-9)))
+    for i in range(items):
+        s = 0 if i % per4 else (i % (num_shards - 1)) + 1
+        shards.queues[s].enqueue(i)
+
+    consumed, lock = [], threading.Lock()
+    done = threading.Event()
+    consumers = [ShardConsumer(shards, home=h, steal_batch=16)
+                 for h in range(workers)]
+
+    per_worker = [0] * workers
+    idle_time = [0.0] * workers
+    last_active = [0.0] * workers  # when each worker last delivered an item
+
+    def work(c: ShardConsumer):
+        while not done.is_set():
+            t_poll = time.perf_counter()
+            if stealing:
+                got = c.take(8)
+            else:
+                got = c.shards.queues[c.home].dequeue_many(8)
+                if not got:
+                    c.idle_polls += 1
+            if not got:
+                time.sleep(0.0002)
+                idle_time[c.home] += time.perf_counter() - t_poll
+                continue
+            per_worker[c.home] += len(got)
+            last_active[c.home] = time.perf_counter()
+            with lock:
+                consumed.extend(got)
+                if len(consumed) >= items:
+                    done.set()
+
+    ts = [threading.Thread(target=work, args=(c,)) for c in consumers]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    done.wait(timeout=60)
+    wall = time.perf_counter() - t0
+    done.set()
+    for t in ts:
+        t.join(timeout=5)
+
+    idle = sum(c.idle_polls for c in consumers)
+    # Dark tail: fraction of worker-time after a worker's *last* delivery —
+    # scheduling-noise-immune. Without stealing, non-home-0 workers go dark
+    # as soon as their shallow shard empties; stealing keeps everyone
+    # delivering until the items run out.
+    end = t0 + wall
+    dark = sum(max(0.0, end - (la if la > 0.0 else t0)) for la in last_active)
+    return {
+        "stealing": stealing,
+        "num_shards": num_shards,
+        "items": len(consumed),
+        "unique": len(set(consumed)),
+        "items_per_sec": len(consumed) / max(wall, 1e-9),
+        "wall_s": wall,
+        "idle_polls": idle,
+        "idle_polls_per_item": idle / max(1, len(consumed)),
+        "idle_s": sum(idle_time),
+        "idle_frac": sum(idle_time) / max(workers * wall, 1e-9),
+        "dark_tail_frac": dark / max(workers * wall, 1e-9),
+        "max_worker_share": max(per_worker) / max(1, len(consumed)),
+        "steals": sum(c.steals for c in consumers),
+        "stolen_items": sum(c.stolen_items for c in consumers),
+    }

@@ -13,8 +13,10 @@ from repro.data.pipeline import DataPipeline               # noqa: E402
 
 
 def main():
+    # num_shards > 1: producers shard by batch_id hash, the consumer drains
+    # its home shard and steals from the deepest sibling (DESIGN.md §8)
     pipe = DataPipeline(batch=4, seq=128, vocab=32000, num_producers=3,
-                        window=32)
+                        window=32, num_shards=2)
     it = iter(pipe)
 
     print("== phase 1: steady state ==")
@@ -22,7 +24,8 @@ def main():
     for i in range(20):
         b = next(it)
     print(f"20 batches in {time.time()-t0:.3f}s; queue nodes: "
-          f"{pipe.queue.live_nodes()} (bounded by window+backpressure)")
+          f"{pipe.shards.live_nodes()} (bounded by window+backpressure); "
+          f"steal stats: {pipe.steal_stats()}")
 
     print("== phase 2: producer 0 stalls 0.5s (straggler) ==")
     pipe.stall_producer(0, 0.5)

@@ -24,7 +24,9 @@ def main():
     eng = Engine(cfg, params, max_batch=3, page_size=8, num_pages=24,
                  window=3, max_seq=64)
     prompts = [[i + 1, (3 * i) % 40 + 2, 7] for i in range(9)]
-    uids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    # One batched submission for the whole burst: a single class-cycle-range
+    # fetch-add and one splice per shard (Engine.submit_many).
+    uids = eng.submit_many(prompts, max_new_tokens=6)
     done = eng.run_until_idle(max_steps=500)
     preempted = sum(done[u].preemptions for u in uids)
     for u in uids:

@@ -8,6 +8,12 @@ coordination-free property the paper proves, applied to input pipelines.
 
 Batch *content* is a pure function of (seed, batch_id): any batch can be
 regenerated, so checkpointing the consumed-id frontier gives exact resume.
+
+With ``num_shards > 1`` the single queue becomes a :class:`ShardSet` from the
+scheduler fabric (DESIGN.md §8): producers shard by ``batch_id`` hash and the
+consumer is a :class:`ShardConsumer` — home shard first, stealing from the
+deepest sibling when the home runs dry (a steal is just a claim, so the
+window-safety and no-loss properties are inherited unchanged).
 """
 
 from __future__ import annotations
@@ -19,6 +25,8 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.core.cmp import CMPQueue
+from repro.sched.classes import ShardSet, shard_for
+from repro.sched.steal import ShardConsumer
 
 
 def synth_batch(seed: int, batch_id: int, batch: int, seq: int, vocab: int) -> Dict:
@@ -48,13 +56,23 @@ class DataPipeline:
     def __init__(self, batch: int, seq: int, vocab: int, *, seed: int = 0,
                  num_producers: int = 2, window: int = 64,
                  start_cursors: Optional[List[int]] = None,
-                 max_queue_batches: int = 32, enqueue_batch: int = 4):
+                 max_queue_batches: int = 32, enqueue_batch: int = 4,
+                 num_shards: int = 1):
         self.batch, self.seq, self.vocab, self.seed = batch, seq, vocab, seed
         self.num_producers = num_producers
         self.enqueue_batch = max(1, int(enqueue_batch))
-        self.queue = CMPQueue(window=window, reclaim_period=16, min_batch=2)
+        self.shards = ShardSet(num_shards, window=window, reclaim_period=16,
+                               min_batch=2)
+        self._consumer = ShardConsumer(self.shards, home=0)
         self._cursors = list(start_cursors) if start_cursors else list(range(num_producers))
-        self._consumed = dict((p, c - num_producers) for p, c in enumerate(self._cursors))
+        # Exact-resume frontier: per producer, the last id up to which
+        # consumption is *contiguous*. Sharded delivery (stealing) can hand
+        # the consumer ids out of order; ids ahead of the frontier wait in
+        # _ooo until the gap closes, so resume can skip nothing (it may
+        # regenerate a few already-consumed batches — the safe direction).
+        self._frontier = dict((p, c - num_producers)
+                              for p, c in enumerate(self._cursors))
+        self._ooo: Dict[int, set] = {p: set() for p in range(num_producers)}
         self._stop = threading.Event()
         self._stalls: Dict[int, float] = {}
         self._max_q = max_queue_batches
@@ -92,9 +110,14 @@ class DataPipeline:
                 bids = [self._cursors[pid] + j * self.num_producers
                         for j in range(n)]
                 self._cursors[pid] = bids[-1] + self.num_producers
-            self.queue.enqueue_many(
-                synth_batch(self.seed, bid, self.batch, self.seq, self.vocab)
-                for bid in bids)
+            # Shard by batch_id hash; one enqueue_many splice per shard hit.
+            by_shard: Dict[int, List[Dict]] = {}
+            for bid in bids:
+                by_shard.setdefault(self.shards.shard_for(bid), []).append(
+                    synth_batch(self.seed, bid, self.batch, self.seq,
+                                self.vocab))
+            for s, items in by_shard.items():
+                self.shards.queues[s].enqueue_many(items)
             with self._lock:
                 self._produced += n
 
@@ -110,16 +133,28 @@ class DataPipeline:
             self._started = True
         return self
 
+    @property
+    def queue(self) -> CMPQueue:
+        """Shard 0 (the whole queue when unsharded) — kept for diagnostics
+        and backward compatibility."""
+        return self.shards.queues[0]
+
     def __iter__(self) -> Iterator[Dict]:
         self.start()
         while not self._stop.is_set():
-            item = self.queue.dequeue()
-            if item is None:
+            got = self._consumer.take(1)  # home shard first, then steal
+            if not got:
                 time.sleep(0.0002)
                 continue
+            item = got[0]
             with self._lock:
                 self._dequeued += 1
-                self._consumed[item["batch_id"] % self.num_producers] = item["batch_id"]
+                bid = item["batch_id"]
+                p = bid % self.num_producers
+                self._ooo[p].add(bid)
+                while self._frontier[p] + self.num_producers in self._ooo[p]:
+                    self._frontier[p] += self.num_producers
+                    self._ooo[p].discard(self._frontier[p])
             yield item
 
     def next_batch(self) -> Dict:
@@ -128,10 +163,11 @@ class DataPipeline:
     # -------------------------------------------------------------- state
     def state(self) -> Dict:
         """Exact-resume frontier: next id each producer should generate is
-        last-consumed + P (regenerating any dropped in-flight batches)."""
+        the last *contiguously* consumed id + P (regenerating any dropped or
+        out-of-order in-flight batches, never skipping one)."""
         with self._lock:
             return {
-                "cursors": [self._consumed[p] + self.num_producers
+                "cursors": [self._frontier[p] + self.num_producers
                             for p in range(self.num_producers)],
                 "seed": self.seed,
             }
@@ -140,6 +176,13 @@ class DataPipeline:
     def from_state(cls, state: Dict, **kw) -> "DataPipeline":
         return cls(seed=state["seed"], start_cursors=state["cursors"],
                    num_producers=len(state["cursors"]), **kw)
+
+    def steal_stats(self) -> Dict:
+        """Consumer-side steal telemetry (zero added atomics)."""
+        c = self._consumer
+        return {"steals": c.steals, "stolen_items": c.stolen_items,
+                "idle_polls": c.idle_polls,
+                "shard_depths": self.shards.depths()}
 
     def close(self) -> None:
         self._stop.set()

@@ -1,7 +1,12 @@
-"""Serving driver: continuous-batching engine on the CMP paged-KV pool.
+"""Serving driver: continuous-batching engine on the CMP paged-KV pool,
+with optional multi-tenant priority classes (the sched fabric).
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --requests 8 --max-new 8
+
+  # 3-class mixed traffic (interactive/batch/background) under a policy:
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
+      --multitenant --policy wfq --requests 9
 """
 
 from __future__ import annotations
@@ -21,11 +26,18 @@ def main() -> None:
     ap.add_argument("--num-pages", type=int, default=128)
     ap.add_argument("--window", type=int, default=4)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--multitenant", action="store_true",
+                    help="3 priority classes (interactive/batch/background) "
+                         "instead of one FIFO queue")
+    ap.add_argument("--policy", default="strict",
+                    choices=("strict", "wfq", "fifo"),
+                    help="cross-class drain policy (with --multitenant)")
     args = ap.parse_args()
 
     import jax
     from repro.configs import get_config
     from repro.models import init_params
+    from repro.sched import QueueClass
     from repro.serving.engine import Engine
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -35,28 +47,44 @@ def main() -> None:
         _, state = C.restore(args.ckpt_dir, {"params": params})
         params = state["params"]
 
+    classes = None
+    if args.multitenant:
+        classes = [QueueClass("interactive", priority=2, weight=8.0),
+                   QueueClass("batch", priority=1, weight=3.0),
+                   QueueClass("background", priority=0, weight=1.0)]
     eng = Engine(cfg, params, max_batch=args.max_batch,
                  page_size=args.page_size, num_pages=args.num_pages,
-                 window=args.window, max_seq=256)
+                 window=args.window, max_seq=256,
+                 classes=classes, policy=args.policy)
+    tenant_cycle = ("interactive", "batch", "background")
     rng = jax.random.PRNGKey(42)
-    uids = []
+    uids, tenant_of = [], {}
     t0 = time.time()
     for i in range(args.requests):
         rng, k = jax.random.split(rng)
         plen = 3 + i % 5
         prompt = [int(t) for t in
                   jax.random.randint(k, (plen,), 1, cfg.vocab_size)]
-        uids.append(eng.submit(prompt, max_new_tokens=args.max_new))
+        qclass = tenant_cycle[i % 3] if args.multitenant else None
+        uid = eng.submit(prompt, max_new_tokens=args.max_new, qclass=qclass)
+        if uid is not None:
+            uids.append(uid)
+            tenant_of[uid] = qclass or "default"
     done = eng.run_until_idle(max_steps=2000)
     dt = time.time() - t0
     total_tokens = sum(len(done[u].output) for u in uids)
     for u in uids:
         r = done[u]
-        print(f"[serve] req {u}: {len(r.output)} tokens "
+        print(f"[serve] req {u} ({tenant_of[u]}): {len(r.output)} tokens "
               f"(preemptions={r.preemptions}) -> {r.output[:8]}")
     print(f"[serve] {len(uids)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s); engine steps={eng.step_count}; "
           f"free pages={eng.pool.free_pages()}/{eng.pool.num_pages}")
+    if args.multitenant:
+        for name, snap in eng.class_stats().items():
+            print(f"[serve] class {name}: submitted={snap['submitted']} "
+                  f"requeued={snap['requeued']} "
+                  f"p50_ms={snap['admit_p50_ms']} p99_ms={snap['admit_p99_ms']}")
 
 
 if __name__ == "__main__":

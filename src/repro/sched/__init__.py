@@ -1,0 +1,27 @@
+"""Coordination-free multi-tenant scheduler: a sharded, priority-class CMP
+queue fabric (DESIGN.md §8).
+
+  - :mod:`repro.sched.classes` — :class:`QueueClass` (sharded CMP queues,
+    dense class-cycle stamps, frontier drain, window-based admission) and
+    :class:`Scheduler` (the fabric).
+  - :mod:`repro.sched.policy`  — strict-priority / weighted-fair /
+    FIFO-across-classes drain policies.
+  - :mod:`repro.sched.steal`   — work stealing between shards (a steal is a
+    claim; window safety is inherited from the protection domain).
+  - :mod:`repro.sched.stats`   — per-class occupancy/latency/steal telemetry
+    sampled from domain state, zero added atomics.
+"""
+
+from repro.sched.classes import (Envelope, QueueClass, Scheduler, ShardSet,
+                                 shard_for)
+from repro.sched.policy import (ClassFifo, DrainPolicy, StrictPriority,
+                                WeightedFair, make_policy)
+from repro.sched.stats import ClassStats, LatencyWindow
+from repro.sched.steal import ShardConsumer, queue_depth, rebalance, steal_into
+
+__all__ = [
+    "Envelope", "QueueClass", "Scheduler", "ShardSet", "shard_for",
+    "DrainPolicy", "StrictPriority", "WeightedFair", "ClassFifo",
+    "make_policy", "ClassStats", "LatencyWindow",
+    "ShardConsumer", "queue_depth", "rebalance", "steal_into",
+]

@@ -1,0 +1,293 @@
+"""Priority-class CMP queue fabric (DESIGN.md §8).
+
+The paper's pitch is that CMP makes queues cheap enough to be the *fabric* of
+a serving pipeline. This module composes many CMP queues under one scheduler:
+
+  * :class:`ShardSet` — S independent :class:`CMPQueue` shards. Shard load is
+    sampled straight from the domain counters (``cycle`` − ``deque_cycle``),
+    zero added atomics.
+  * :class:`QueueClass` — one tenant/priority class. Every submit linearizes
+    at a dense per-class cycle stamp (one fetch-add); the item lands on shard
+    ``seq % S``. The drain side re-merges shards through a *cycle frontier*:
+    items are delivered in exactly class-cycle order, no matter which shard
+    holds them — which is what makes work stealing (migration between shards)
+    order-invisible. Admission is window-bounded via ``domain.window_admit``:
+    the class rejects (backpressure) instead of growing without bound.
+  * :class:`Scheduler` — the fabric: classes + a drain policy + one global
+    arrival stamp (for FIFO-across-classes merges).
+
+Ordering contract: *strict FIFO per class, policy-relaxed across classes.*
+Within a class, delivery order is exactly the class-cycle order assigned at
+submit — stronger than the base queue's per-producer FIFO, and preserved
+under concurrent producers and stealers (tests/test_sched.py). Across
+classes, the policy decides — that is the only ordering the fabric relaxes.
+
+Concurrency contract: any number of producers (``submit``/``submit_many``)
+and stealers (:mod:`repro.sched.steal`) run fully concurrently; the *drain*
+of one class is single-caller (the scheduler loop), like the engine's
+scheduler thread. A producer stalled between its stamp and its shard enqueue
+stalls only its own class's frontier (head-of-line within the class is what
+strict FIFO *means*); other classes are unaffected — that is the fabric's
+whole point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.atomics import AtomicCell, cpu_pause
+from repro.core.cmp import CMPQueue
+from repro.core.domain import window_admit
+from repro.sched.stats import ClassStats
+
+# Drain-side bounded spin while the frontier item is mid-enqueue (a producer
+# between its stamp fetch-add and its shard splice). The gap window is a few
+# instructions; a handful of pauses covers it without coordinating.
+_GAP_PATIENCE = 64
+
+
+@dataclasses.dataclass
+class Envelope:
+    """What actually travels through a class's shards.
+
+    ``seq`` is the class cycle (dense, assigned at submit — the class-local
+    FIFO order). ``stamp`` is the fabric-global arrival cycle (the merge key
+    for FIFO-across-classes). ``t_submit`` feeds admission-latency telemetry.
+    """
+    __slots__ = ("seq", "stamp", "t_submit", "payload")
+    seq: int
+    stamp: int
+    t_submit: float
+    payload: Any
+
+    def __lt__(self, other: "Envelope") -> bool:  # heapq (requeue order)
+        return self.seq < other.seq
+
+
+def shard_for(key: int, num_shards: int) -> int:
+    """Stable multiplicative hash (Knuth) — producer-side shard pick."""
+    return (int(key) * 2654435761 % (1 << 32)) % num_shards
+
+
+def queue_depth(q: CMPQueue) -> int:
+    """Unclaimed-depth estimate for one CMP queue, read from the domain
+    counters alone (enqueue cycle − protection boundary): zero added
+    atomics, approximate under in-flight claims, exact when quiesced."""
+    return max(0, q.cycle.load() - q.deque_cycle.load())
+
+
+class ShardSet:
+    """S independent CMP queues with domain-state load sampling."""
+
+    def __init__(self, num_shards: int = 1, **queue_kw):
+        assert num_shards >= 1
+        self.queues: List[CMPQueue] = [CMPQueue(**queue_kw)
+                                       for _ in range(num_shards)]
+
+    def __len__(self) -> int:
+        return len(self.queues)
+
+    def shard_for(self, key: int) -> int:
+        return shard_for(key, len(self.queues))
+
+    def depth(self, idx: int) -> int:
+        """Unclaimed-depth estimate for one shard (see `queue_depth`)."""
+        return queue_depth(self.queues[idx])
+
+    def depths(self) -> List[int]:
+        return [self.depth(i) for i in range(len(self.queues))]
+
+    def live_nodes(self) -> int:
+        return sum(q.live_nodes() for q in self.queues)
+
+
+class QueueClass:
+    """One tenant/priority class over a CMP shard set.
+
+    Args:
+      name: class identity (policy and telemetry key).
+      priority: bigger = more urgent (strict-priority order, preemption rank).
+      weight: share under weighted-fair draining.
+      num_shards: CMP queue shards (stealing targets).
+      admit_window: window-based admission bound — at most this many items
+        in flight (submitted, not yet first-delivered); ``None`` = unbounded.
+        This is ``domain.window_admit`` read as backpressure: the j-th
+        outstanding submission is admitted iff j < W. Enforced with one
+        fetch-add on an in-flight counter (claim-then-check, surplus rolled
+        back before anything is enqueued), so the bound holds under any
+        number of racing producers — overshoot is impossible; a transient
+        spurious reject under a race is the conservative direction.
+      queue_kw: forwarded to each shard's :class:`CMPQueue`.
+    """
+
+    def __init__(self, name: str, *, priority: int = 0, weight: float = 1.0,
+                 num_shards: int = 1, admit_window: Optional[int] = None,
+                 **queue_kw):
+        self.name = name
+        self.priority = int(priority)
+        self.weight = float(weight)
+        self.admit_window = admit_window
+        self.shards = ShardSet(num_shards, **queue_kw)
+        self._seq = AtomicCell(0)      # class cycle: submit linearization point
+        self._inflight = AtomicCell(0)  # admission-window occupancy (atomic)
+        self._frontier = 0             # next seq to deliver (drain-side only)
+        self._stage: Dict[int, Envelope] = {}   # claimed, awaiting their turn
+        self._requeue: List[Envelope] = []      # preempted (seq < frontier)
+        self.stats = ClassStats(name)
+
+    # ------------------------------------------------------------- producers
+    def pending(self) -> int:
+        """Items submitted but not yet first-delivered (+ requeued)."""
+        return max(0, self._seq.load() - self._frontier) + len(self._requeue)
+
+    def submit(self, payload: Any, *, stamp: int = 0) -> Optional[Envelope]:
+        """Admit one item; returns its envelope, or None on window rejection.
+
+        The fetch-add on the class cycle is the linearization point; placement
+        is round-robin by cycle (``seq % S``) so the frontier drain knows the
+        stamps are dense."""
+        if self.admit_window is not None:
+            # Claim a window seat first, roll back on overflow: racing
+            # producers can never exceed the bound (j-th in flight iff j < W).
+            pos = self._inflight.fetch_add(1)
+            if not window_admit(pos, self.admit_window):
+                self._inflight.fetch_add(-1)
+                self.stats.add_rejected()
+                return None
+        seq = self._seq.fetch_add(1)
+        env = Envelope(seq, stamp, time.monotonic(), payload)
+        self.shards.queues[seq % len(self.shards)].enqueue(env)
+        self.stats.add_submitted()
+        return env
+
+    def submit_many(self, payloads: Sequence[Any], *, stamp: int = 0
+                    ) -> List[Optional[Envelope]]:
+        """Batched admission: one cycle-range fetch-add for the accepted
+        prefix, one ``enqueue_many`` splice per shard. Items beyond the
+        admission window are rejected (None entries, suffix-aligned)."""
+        payloads = list(payloads)
+        n = len(payloads)
+        if self.admit_window is not None:
+            # Claim the whole range, return the surplus: bound never exceeded.
+            old = self._inflight.fetch_add(n)
+            room = max(0, min(n, self.admit_window - old))
+            if room < n:
+                self._inflight.fetch_add(room - n)
+            n = room
+        if n == 0:
+            self.stats.add_rejected(len(payloads))
+            return [None] * len(payloads)
+        base = self._seq.fetch_add(n)
+        now = time.monotonic()
+        envs = [Envelope(base + i, stamp + i, now, p)
+                for i, p in enumerate(payloads[:n])]
+        S = len(self.shards)
+        for s in range(S):
+            group = envs[(s - base) % S::S] if S > 1 else envs
+            if group:
+                self.shards.queues[s].enqueue_many(group)
+        self.stats.add_submitted(n)
+        if len(payloads) > n:
+            self.stats.add_rejected(len(payloads) - n)
+        return envs + [None] * (len(payloads) - n)
+
+    # ---------------------------------------------------------------- drain
+    def requeue(self, env: Envelope) -> None:
+        """Return a previously-delivered envelope (preemption, admission
+        park) to the class. It re-enters at its *original* cycle position:
+        the requeue heap is served before the frontier, ordered by seq."""
+        heapq.heappush(self._requeue, env)
+        self.stats.requeued += 1
+
+    def _stage_from_shards(self, want: int) -> int:
+        """Claim up to ``want`` envelopes from every shard into the staging
+        map. A steal (migration) between shards is invisible here: staging
+        keys by seq, delivery is by frontier, placement does not matter."""
+        got = 0
+        for q in self.shards.queues:
+            for env in q.dequeue_many(want):
+                self._stage[env.seq] = env
+                got += 1
+        return got
+
+    def drain(self, k: int) -> List[Envelope]:
+        """Deliver up to ``k`` envelopes in exact class-cycle order.
+
+        Single-caller (the scheduler loop). Requeued (preempted) items first
+        — their cycles predate the frontier — then frontier items, claimed
+        from the shards and re-merged by the dense seq stamps. Never delivers
+        past a gap: a missing seq means a producer is mid-submit, so we spin
+        briefly and otherwise return short (strict FIFO is preserved, the
+        gap's class alone waits)."""
+        out: List[Envelope] = []
+        while self._requeue and len(out) < k:
+            out.append(heapq.heappop(self._requeue))
+        spins = 0
+        while len(out) < k:
+            while len(out) < k and self._frontier in self._stage:
+                env = self._stage.pop(self._frontier)
+                self._frontier += 1
+                if self.admit_window is not None:
+                    self._inflight.fetch_add(-1)  # window seat freed
+                self.stats.record_delivery(env)
+                out.append(env)
+                spins = 0
+            if len(out) >= k:
+                break
+            if self._frontier >= self._seq.load():
+                break  # nothing submitted beyond the frontier
+            if self._stage_from_shards(k - len(out)) == 0:
+                # Frontier item stamped but not yet spliced: bounded wait.
+                spins += 1
+                if spins > _GAP_PATIENCE:
+                    self.stats.gap_waits += 1
+                    break
+                cpu_pause()
+        self.stats.delivered += len(out)
+        return out
+
+    # ------------------------------------------------------------ telemetry
+    def snapshot(self) -> dict:
+        return self.stats.snapshot(pending=self.pending(),
+                                   shard_depths=self.shards.depths())
+
+
+class Scheduler:
+    """The class fabric: named classes + a drain policy + the global arrival
+    stamp that FIFO-across-classes merges on."""
+
+    def __init__(self, classes: Sequence[QueueClass], policy="strict"):
+        from repro.sched.policy import make_policy
+        assert classes, "scheduler needs at least one class"
+        self.classes: List[QueueClass] = list(classes)
+        self.by_name: Dict[str, QueueClass] = {c.name: c for c in self.classes}
+        assert len(self.by_name) == len(self.classes), "duplicate class names"
+        self.policy = make_policy(policy)
+        self._stamp = AtomicCell(0)  # fabric-global arrival cycle
+
+    @property
+    def default_class(self) -> str:
+        return self.classes[0].name
+
+    def submit(self, qclass: str, payload: Any) -> Optional[Envelope]:
+        return self.by_name[qclass].submit(payload,
+                                           stamp=self._stamp.fetch_add(1))
+
+    def submit_many(self, qclass: str, payloads: Sequence[Any]
+                    ) -> List[Optional[Envelope]]:
+        qc = self.by_name[qclass]
+        return qc.submit_many(payloads,
+                              stamp=self._stamp.fetch_add(len(payloads)))
+
+    def drain(self, k: int) -> List[Tuple[QueueClass, Envelope]]:
+        """One admission batch: the policy composes per-class drains."""
+        return self.policy.drain(self.classes, k)
+
+    def pending(self) -> int:
+        return sum(c.pending() for c in self.classes)
+
+    def snapshot(self) -> dict:
+        return {c.name: c.snapshot() for c in self.classes}

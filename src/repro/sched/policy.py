@@ -1,0 +1,149 @@
+"""Pluggable drain policies: how one admission batch is composed from many
+priority classes (DESIGN.md §8).
+
+A policy's ``drain(classes, k)`` returns up to ``k`` ``(qclass, envelope)``
+pairs — one batched admission per engine step, built from per-class
+``QueueClass.drain`` calls (which are themselves batched ``dequeue_many``
+claims underneath). Policies only decide the *cross-class* interleaving;
+within a class the frontier drain already fixed the order.
+
+  * :class:`StrictPriority` — higher ``priority`` empties first. Interactive
+    traffic starves background under load, by design.
+  * :class:`WeightedFair` — deficit round robin over ``weight``: each round a
+    class earns quantum × weight credits and spends one per item drained;
+    an emptied class forfeits its credit (no hoarding). Long-run throughput
+    shares converge to the weights.
+  * :class:`ClassFifo` — FIFO *across* classes, recovered by merging class
+    heads on the fabric-global arrival stamp: the single-queue behavior,
+    re-expressed over the sharded fabric (exact when quiesced, races resolve
+    like the base queue's).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+from repro.sched.classes import Envelope, QueueClass
+
+Drained = List[Tuple[QueueClass, Envelope]]
+
+
+class DrainPolicy:
+    # True iff this policy admits strictly by class priority, which is what
+    # makes priority-driven *lane* preemption in the engine meaningful: the
+    # freed lane is guaranteed to go to the higher class. Weight- or
+    # stamp-driven policies must leave it False or an eviction can be
+    # immediately undone by the policy re-admitting the victim.
+    honors_priority = False
+
+    def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
+        raise NotImplementedError
+
+
+class StrictPriority(DrainPolicy):
+    honors_priority = True
+
+    def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
+        out: Drained = []
+        for qc in sorted(classes, key=lambda c: -c.priority):
+            if len(out) >= k:
+                break
+            out.extend((qc, env) for env in qc.drain(k - len(out)))
+        return out
+
+
+class WeightedFair(DrainPolicy):
+    """Deficit round robin over ``weight``. Each ``drain`` call is one DRR
+    round: every backlogged class earns its weight-share of the ``k`` slots
+    (fractions carry over as deficit, so a small-weight class still gets a
+    slot every few rounds), then classes spend their credit round-robin until
+    the batch is full or everyone is dry. An emptied class forfeits its
+    credit; accumulated credit is burst-capped so a class returning from idle
+    cannot monopolize a batch."""
+
+    def __init__(self, quantum: float = 1.0):
+        self.quantum = float(quantum)
+        self._deficit: Dict[str, float] = {}
+
+    def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
+        out: Drained = []
+        backlogged = [qc for qc in classes if qc.pending() > 0]
+        for qc in classes:
+            if qc.pending() == 0:
+                self._deficit[qc.name] = 0.0  # forfeit: no credit hoarding
+        if not backlogged:
+            return out
+        # One round's credit: k slots split in weight proportion (quantum
+        # scales the round size), accumulated onto carried-over deficit.
+        total_w = sum(qc.weight for qc in backlogged)
+        for qc in backlogged:
+            share = self.quantum * k * qc.weight / total_w
+            d = self._deficit.get(qc.name, 0.0) + share
+            self._deficit[qc.name] = min(d, 2.0 * share + 1.0)  # burst cap
+        # Spend the credit round-robin; ~k+len iterations always suffice.
+        for _ in range(2 * k + len(backlogged) + 2):
+            if len(out) >= k:
+                break
+            progressed = False
+            for qc in backlogged:
+                if len(out) >= k:
+                    break
+                take = min(k - len(out), int(self._deficit[qc.name]))
+                got = qc.drain(take) if take > 0 else []
+                self._deficit[qc.name] -= len(got)
+                if take > 0 and len(got) < take:
+                    self._deficit[qc.name] = 0.0  # ran dry mid-quantum
+                if got:
+                    progressed = True
+                    out.extend((qc, env) for env in got)
+            if not progressed:
+                break
+        if not out:
+            # All deficits still fractional (many classes, small k): grant
+            # the largest creditor one item so every call makes progress.
+            qc = max(backlogged, key=lambda c: self._deficit[c.name])
+            got = qc.drain(1)
+            self._deficit[qc.name] -= len(got)
+            out.extend((qc, env) for env in got)
+        return out
+
+
+class ClassFifo(DrainPolicy):
+    """Cycle-timestamp merge: repeatedly deliver the class head with the
+    smallest fabric arrival stamp. Heads drained but not yet merged persist
+    in the policy between calls (they count as pending deliveries)."""
+
+    def __init__(self):
+        self._heads: Dict[str, Tuple[QueueClass, Envelope]] = {}
+
+    def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
+        out: Drained = []
+        while len(out) < k:
+            for qc in classes:
+                if qc.name not in self._heads:
+                    got = qc.drain(1)
+                    if got:
+                        self._heads[qc.name] = (qc, got[0])
+            if not self._heads:
+                break
+            name = min(self._heads, key=lambda n: self._heads[n][1].stamp)
+            out.append(self._heads.pop(name))
+        return out
+
+
+_POLICIES = {
+    "strict": StrictPriority,
+    "wfq": WeightedFair,
+    "fifo": ClassFifo,
+}
+
+
+def make_policy(policy) -> DrainPolicy:
+    """Accept a policy instance or one of the names: strict | wfq | fifo."""
+    if isinstance(policy, DrainPolicy):
+        return policy
+    try:
+        return _POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown policy {policy!r}; "
+                         f"choose from {sorted(_POLICIES)}") from None

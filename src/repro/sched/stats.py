@@ -1,0 +1,95 @@
+"""Per-class scheduler telemetry with zero added atomics (DESIGN.md §8).
+
+Everything here is sampled from state that already exists for correctness:
+shard occupancy comes from the domain counters (``cycle`` − ``deque_cycle``,
+plain atomic loads), class depth from the class cycle vs. the drain frontier,
+and admission latency from the wall-clock stamp every envelope already
+carries. Delivery-side counters are plain ints written by the single drainer;
+submit-side counters (submitted/rejected) have arbitrarily many writers, so
+they are fetch-adds — reads are diagnostic snapshots, exact when quiesced.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+from repro.core.atomics import AtomicCell
+
+
+class LatencyWindow:
+    """Fixed-size ring of the most recent latency samples (seconds).
+    Appended by the single drainer — no locks, no atomics."""
+
+    def __init__(self, capacity: int = 2048):
+        self.capacity = int(capacity)
+        self._buf: List[float] = []
+        self._idx = 0
+        self.count = 0  # total samples ever recorded
+
+    def record(self, seconds: float) -> None:
+        if len(self._buf) < self.capacity:
+            self._buf.append(seconds)
+        else:
+            self._buf[self._idx] = seconds
+            self._idx = (self._idx + 1) % self.capacity
+        self.count += 1
+
+    def percentile(self, p: float) -> Optional[float]:
+        """p in [0, 100]; None when empty. Snapshot-sorts the ring (cheap at
+        telemetry cadence, never on the hot path)."""
+        if not self._buf:
+            return None
+        s = sorted(self._buf)
+        i = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
+        return s[i]
+
+
+class ClassStats:
+    """Counters + admission-latency reservoir for one :class:`QueueClass`.
+    ``delivered``/``requeued``/``gap_waits`` are written by the single
+    drainer only; the submit-side counts race across producers and go
+    through :meth:`add_submitted`/:meth:`add_rejected` (fetch-add)."""
+
+    def __init__(self, name: str, latency_capacity: int = 2048):
+        self.name = name
+        self._submitted = AtomicCell(0)
+        self._rejected = AtomicCell(0)
+        self.delivered = 0
+        self.requeued = 0
+        self.gap_waits = 0
+        self.latency = LatencyWindow(latency_capacity)
+
+    @property
+    def submitted(self) -> int:
+        return self._submitted.load()
+
+    @property
+    def rejected(self) -> int:
+        return self._rejected.load()
+
+    def add_submitted(self, n: int = 1) -> None:
+        self._submitted.fetch_add(n)
+
+    def add_rejected(self, n: int = 1) -> None:
+        self._rejected.fetch_add(n)
+
+    def record_delivery(self, env) -> None:
+        self.latency.record(time.monotonic() - env.t_submit)
+
+    def snapshot(self, *, pending: int = 0,
+                 shard_depths: Optional[List[int]] = None) -> dict:
+        p50 = self.latency.percentile(50)
+        p99 = self.latency.percentile(99)
+        return {
+            "class": self.name,
+            "pending": pending,
+            "shard_depths": list(shard_depths or []),
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "delivered": self.delivered,
+            "requeued": self.requeued,
+            "gap_waits": self.gap_waits,
+            "admit_p50_ms": None if p50 is None else p50 * 1e3,
+            "admit_p99_ms": None if p99 is None else p99 * 1e3,
+        }

@@ -1,17 +1,20 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine on the priority-class CMP queue fabric.
 
 CMP end to end:
-  * admission — requests enter through a strict-FIFO :class:`CMPQueue`
-    (global arrival order across submitter threads = fairness, the paper's
-    strict-FIFO property doing real work); the scheduler drains it with one
-    batched ``dequeue_many`` per step instead of a dequeue per lane;
+  * admission — requests enter through the :mod:`repro.sched` fabric: one
+    :class:`QueueClass` per tenant/priority tier (strict FIFO *within* a
+    class, window-bounded admission), a pluggable policy (strict-priority /
+    weighted-fair / FIFO-across-classes) composing one batched drain per
+    engine step. A single default class reproduces the original global
+    strict-FIFO queue exactly;
   * KV memory — pages from :class:`PagedKVPool`; finished/preempted requests
     retire pages which recycle after the protection window W (no refcounts,
     no sweep barrier);
-  * overload — if the pool runs dry the engine *preempts* the youngest
-    request (retires its pages, requeues it). Recovery is automatic: the
-    pages return to FREE after W steps. A stalled writer/reader can delay
-    nothing (bounded reclamation).
+  * overload — if the pool runs dry the engine preempts the least entitled
+    lane: lowest class priority first, youngest class cycle within it. The
+    victim's pages retire and its request re-enters *its own* class queue at
+    its original cycle position (served again before anything younger in the
+    class). Recovery is automatic: the pages return to FREE after W steps.
 
 The scheduler is vectorized: ``block_tables``/``seq_lens``/``last_tok`` live
 on device across steps (no numpy re-wrap per iteration), per-lane decode
@@ -23,14 +26,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.cmp import CMPQueue
+from repro.sched import Envelope, QueueClass, Scheduler
 from repro.serving.kv_cache import PagedKVPool
 from repro.serving.paged_model import paged_forward
 
@@ -40,6 +43,7 @@ class Request:
     uid: int
     prompt: List[int]
     max_new_tokens: int = 16
+    qclass: str = "default"
     output: List[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
 
@@ -47,7 +51,9 @@ class Request:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  page_size: int = 16, num_pages: int = 64, window: int = 4,
-                 max_seq: int = 128):
+                 max_seq: int = 128,
+                 classes: Optional[Sequence[QueueClass]] = None,
+                 policy="strict"):
         assert all(k in ("dense", "moe") for k in cfg.block_pattern), \
             "paged engine serves attention-based families"
         self.cfg, self.params = cfg, params
@@ -59,37 +65,54 @@ class Engine:
         # (their masked decode writes land here, never on live pages).
         scratch, ok = self.pool.alloc(1)
         assert bool(ok.all()) and int(scratch[0]) == 0
-        self.queue = CMPQueue(window=max(64, window), reclaim_period=32)
+        if classes is None:
+            classes = [QueueClass("default", window=max(64, window),
+                                  reclaim_period=32)]
+        self.sched = Scheduler(classes, policy=policy)
         self.step_count = 0
         self._uid = itertools.count()
         # active request table (host side); lane tensors are device-resident
         # across steps — the decode path never round-trips through numpy.
         self.active: List[Optional[Request]] = [None] * max_batch
+        # the envelope each lane was admitted with: (QueueClass, Envelope);
+        # preemption requeues it so the request keeps its class-cycle seat
+        self._lane_env: List[Optional[Tuple[QueueClass, Envelope]]] = \
+            [None] * max_batch
         self.block_tables = jnp.zeros((max_batch, self.pps), jnp.int32)
         self.seq_lens = jnp.zeros((max_batch,), jnp.int32)
         self.last_tok = jnp.zeros((max_batch,), jnp.int32)
         self.completed: Dict[int, Request] = {}
-        self.pending = 0  # submitted - admitted (emptiness check w/o dequeue)
-        self._backlog: List[Request] = []  # head-of-line retries (keeps FIFO)
+        self.pending = 0  # accepted - admitted (emptiness check w/o dequeue)
         # Prefill and decode are the same function traced at different
         # sequence lengths — one jit, one compilation cache.
         self._forward = jax.jit(
             lambda p, t, kp, vp, bt, sl: paged_forward(p, t, cfg, kp, vp, bt, sl))
 
     # ---------------------------------------------------------------- client
-    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
-        uid = next(self._uid)
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               qclass: Optional[str] = None) -> Optional[int]:
+        """Enqueue one request into its class; returns its uid, or None when
+        the class's admission window rejected it (backpressure)."""
+        name = qclass or self.sched.default_class
+        req = Request(next(self._uid), list(prompt), max_new_tokens,
+                      qclass=name)
+        if self.sched.submit(name, req) is None:
+            return None
         self.pending += 1
-        self.queue.enqueue(Request(uid, list(prompt), max_new_tokens))
-        return uid
+        return req.uid
 
-    def submit_many(self, prompts: List[List[int]], max_new_tokens: int = 16) -> List[int]:
-        """Batched admission enqueue: one cycle-range fetch-add + one splice
-        for the whole burst (CMPQueue.enqueue_many)."""
-        reqs = [Request(next(self._uid), list(p), max_new_tokens) for p in prompts]
-        self.pending += len(reqs)
-        self.queue.enqueue_many(reqs)
-        return [r.uid for r in reqs]
+    def submit_many(self, prompts: List[List[int]], max_new_tokens: int = 16,
+                    qclass: Optional[str] = None) -> List[Optional[int]]:
+        """Batched admission enqueue: one class-cycle-range fetch-add + one
+        splice per shard for the whole burst. Window-rejected entries come
+        back as None."""
+        name = qclass or self.sched.default_class
+        reqs = [Request(next(self._uid), list(p), max_new_tokens, qclass=name)
+                for p in prompts]
+        envs = self.sched.submit_many(name, reqs)
+        uids = [r.uid if e is not None else None for r, e in zip(reqs, envs)]
+        self.pending += sum(e is not None for e in envs)
+        return uids
 
     # ---------------------------------------------------------------- pages
     def _alloc_pages(self, n: int) -> Optional[np.ndarray]:
@@ -109,46 +132,84 @@ class Engine:
         self.block_tables = self.block_tables.at[lane].set(0)
         self.seq_lens = self.seq_lens.at[lane].set(0)
         self.active[lane] = None
+        self._lane_env[lane] = None
 
-    def _preempt_youngest(self) -> bool:
-        lanes = [i for i, r in enumerate(self.active) if r is not None]
-        if not lanes:
-            return False
-        lane = max(lanes, key=lambda i: self.active[i].uid)
+    def _entitlement(self, lane: int):
+        """Lane sort key, least entitled first: lowest class priority, then
+        youngest arrival. Age ties are broken on the fabric-global arrival
+        stamp, not the class cycle — class cycles are independent counters,
+        so only the stamp is comparable across classes (within one class the
+        two orders agree)."""
+        qc, env = self._lane_env[lane]
+        return (qc.priority, -env.stamp)
+
+    def _evict_lane(self, lane: int) -> None:
+        """Preempt one lane: retire its pages (they recycle after W steps)
+        and requeue the request into *its own* class at its original cycle —
+        its FIFO seat within the class is kept."""
+        qc, env = self._lane_env[lane]
         req = self.active[lane]
         req.preemptions += 1
         req.output = []
         self._retire_request(lane)
+        qc.requeue(env)
         self.pending += 1
-        self.queue.enqueue(req)  # back of the FIFO
+
+    def _preempt_for(self, prio: int, stamp: int) -> bool:
+        """Free pages for a claimant entitled as (class priority, arrival
+        stamp): evict the least entitled active lane — lowest class first,
+        youngest arrival within it — but never one at least as entitled
+        as the claimant (no priority inversion, no age inversion)."""
+        lanes = [i for i, r in enumerate(self.active) if r is not None]
+        if not lanes:
+            return False
+        lane = min(lanes, key=self._entitlement)
+        if self._entitlement(lane) >= (prio, -stamp):
+            return False
+        self._evict_lane(lane)
         return True
 
     # ---------------------------------------------------------------- sched
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.active) if r is None]
+        # Class-aware lane preemption: pending work of a *strictly higher*
+        # class claims lanes even when none are free, evicting the least
+        # entitled occupants (equal-priority pending never lane-preempts —
+        # it waits for a natural completion, as in the single-class engine).
+        # Only under a priority-honoring policy: otherwise the next drain is
+        # not guaranteed to admit the higher class, and the eviction could be
+        # undone immediately (e.g. a FIFO merge re-admitting the victim).
+        while self.sched.policy.honors_priority and len(free) < self.max_batch:
+            occupied = [i for i, r in enumerate(self.active) if r is not None]
+            lane = min(occupied, key=self._entitlement)
+            victim_prio = self._lane_env[lane][0].priority
+            higher_pending = sum(qc.pending() for qc in self.sched.classes
+                                 if qc.priority > victim_prio)
+            if higher_pending <= len(free):
+                break
+            self._evict_lane(lane)
+            free.append(lane)
         if not free:
             return
-        # Head-of-line retries first, then ONE batched dequeue for the rest
-        # of the free lanes (amortized claim, strict FIFO preserved).
-        reqs = self._backlog[:len(free)]
-        del self._backlog[:len(reqs)]
-        if len(reqs) < len(free):
-            reqs.extend(self.queue.dequeue_many(len(free) - len(reqs)))
-        for idx, (lane, req) in enumerate(zip(free, reqs)):
-            self.pending -= 1
+        # ONE policy drain composes the admission batch across classes
+        # (batched dequeue_many claims under the hood, strict FIFO per class).
+        batch = self.sched.drain(len(free))
+        for idx, (lane, (qc, env)) in enumerate(zip(free, batch)):
+            req: Request = env.payload
             need = (len(req.prompt) + self.page_size - 1) // self.page_size
             pages = self._alloc_pages(max(1, need))
             while pages is None:
-                if not self._preempt_youngest():
-                    # Pool dry, nothing to preempt: park this and every
-                    # not-yet-admitted request at the backlog head (FIFO).
-                    # Only the current request's pending decrement has run;
-                    # the rest still carry their submit-time count.
-                    self.pending += 1
-                    self._backlog = reqs[idx:] + self._backlog
+                if not self._preempt_for(qc.priority, env.stamp):
+                    # Pool dry, nothing less entitled to evict: every request
+                    # not yet laned goes back to its own class, at its own
+                    # cycle seat (redelivered first next drain).
+                    for qc2, env2 in batch[idx:]:
+                        qc2.requeue(env2)
                     return
                 pages = self._alloc_pages(max(1, need))
+            self.pending -= 1
             self.active[lane] = req
+            self._lane_env[lane] = (qc, env)
             self.block_tables = self.block_tables.at[lane, :len(pages)].set(
                 jnp.asarray(pages))
             self.seq_lens = self.seq_lens.at[lane].set(0)
@@ -186,19 +247,28 @@ class Engine:
                     jnp.asarray(pages))
                 return
         # Pool pressure: grow lane by lane (earliest lane first) so partial
-        # availability is used instead of burned, preempting as needed; a
+        # availability is used instead of burned, preempting as needed (the
+        # growing lane's own entitlement decides who may be evicted); a
         # lane preempted out from under us is skipped.
         for lane in lanes:
             if self.active[lane] is None:
                 continue
+            qc, env = self._lane_env[lane]
             page = self._alloc_pages(1)
             while page is None:
-                if not self._preempt_youngest() or self.active[lane] is None:
+                if (not self._preempt_for(qc.priority, env.stamp)
+                        or self.active[lane] is None):
                     break
                 page = self._alloc_pages(1)
             if page is not None and self.active[lane] is not None:
                 self.block_tables = self.block_tables.at[
                     lane, int(used[lane])].set(int(page[0]))
+            elif page is None and self.active[lane] is not None:
+                # Nobody less entitled to evict and the pool is dry: the
+                # growing lane must preempt *itself* (requeue at its cycle
+                # seat) — decoding on without the page would write this
+                # position's KV into the scratch page and corrupt the output.
+                self._evict_lane(lane)
 
     # ---------------------------------------------------------------- step
     def step(self) -> List[Request]:
@@ -238,3 +308,9 @@ class Engine:
             if all(r is None for r in self.active) and self.pending == 0:
                 break
         return self.completed
+
+    # ------------------------------------------------------------ telemetry
+    def class_stats(self) -> dict:
+        """Per-class fabric snapshot (occupancy, admission latency, rejects)
+        — reads existing domain counters only."""
+        return self.sched.snapshot()

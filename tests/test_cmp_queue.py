@@ -149,6 +149,7 @@ def test_atomic_op_counts_match_paper():
     assert deq_ops <= 9 + 4.5, deq_ops
 
 
+@pytest.mark.slow
 def test_chaos_interleaving_preserves_safety():
     """Random delays at atomic boundaries: still no loss/duplication."""
     rng = random.Random(0)

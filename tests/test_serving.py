@@ -141,6 +141,126 @@ def test_concurrent_submitters_strict_fifo(dense_model):
     assert completion == submitted
 
 
+def test_class_aware_preemption_evicts_lowest_class_first(dense_model):
+    """Under pool exhaustion the engine preempts the lowest class first, and
+    the preempted request re-enters *its own* class queue at its original
+    cycle (served before anything younger in that class)."""
+    from repro.sched import QueueClass
+
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=2, page_size=4, num_pages=7,
+                 window=2, max_seq=24,
+                 classes=[QueueClass("background", priority=0),
+                          QueueClass("interactive", priority=2)],
+                 policy="strict")
+    # Fill both lanes with background work (3 pages each incl. growth room).
+    bg = [eng.submit([1, 2, 3, 4, 5], max_new_tokens=8, qclass="background")
+          for _ in range(2)]
+    eng.step()
+    assert all(r is not None for r in eng.active)
+    # Interactive arrival under a dry pool must evict a background lane...
+    hi = eng.submit([9, 9, 9, 9], max_new_tokens=2, qclass="interactive")
+    eng.step()
+    admitted = {r.uid for r in eng.active if r is not None} | set(eng.completed)
+    assert hi in admitted, "interactive was not admitted"
+    done = eng.run_until_idle(max_steps=400)
+    assert set(done) >= {hi, *bg}
+    # ...and the victim was a background request, never the interactive one.
+    assert done[hi].preemptions == 0
+    assert sum(done[u].preemptions for u in bg) >= 1
+    # outputs stay correct through evict -> requeue -> re-prefill
+    assert done[hi].output == _ref_generate(cfg, params, [9, 9, 9, 9], 2)
+    snap = eng.class_stats()
+    assert snap["background"]["requeued"] >= 1
+    assert snap["interactive"]["requeued"] == 0
+
+
+def test_preempted_request_keeps_class_fifo_seat(dense_model):
+    """Same-class preemption: the victim is the *youngest* class cycle, and
+    on requeue it is re-served before every later submission of its class —
+    FIFO position by original cycle, not by preemption time."""
+    from repro.sched import QueueClass
+
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=1, page_size=4, num_pages=4,
+                 window=1, max_seq=16,
+                 classes=[QueueClass("default", priority=0)])
+    uids = [eng.submit([i + 1, i + 2], max_new_tokens=2) for i in range(4)]
+    completion = []
+    seen = set()
+    for _ in range(300):
+        eng.step()
+        for u in eng.completed:
+            if u not in seen:
+                seen.add(u)
+                completion.append(u)
+        if len(seen) == 4:
+            break
+    # strict within-class FIFO end to end, preemptions or not
+    assert completion == uids
+
+
+def test_priority_inversion_never_happens(dense_model):
+    """A lower class arriving later can never evict a higher-class lane."""
+    from repro.sched import QueueClass
+
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=2, page_size=4, num_pages=7,
+                 window=2, max_seq=24,
+                 classes=[QueueClass("lo", priority=0),
+                          QueueClass("hi", priority=1)])
+    hi = [eng.submit([5, 6, 7, 8], max_new_tokens=6, qclass="hi")
+          for _ in range(2)]
+    eng.step()
+    lo = eng.submit([1, 2, 3], max_new_tokens=2, qclass="lo")
+    done = eng.run_until_idle(max_steps=400)
+    assert set(done) >= {lo, *hi}
+    for u in hi:
+        assert done[u].preemptions == 0, "higher class was evicted by lower"
+
+
+def test_growth_starved_lane_self_evicts_not_corrupts(dense_model):
+    """max_batch=1: when page growth fails (the previous request's retired
+    pages are still inside the protection window) and there is nobody less
+    entitled to evict, the growing lane preempts *itself* (clean requeue at
+    its cycle seat) instead of decoding into the scratch page — outputs must
+    still match the reference exactly."""
+    cfg, params = dense_model
+    # 3 usable pages (1 reserved scratch). Request A completes holding 2
+    # pages, which stay window-protected for W=2 steps; request B admits on
+    # the 1 remaining page, then its first growth finds the pool dry with
+    # itself as the only (least-entitled) lane.
+    eng = Engine(cfg, params, max_batch=1, page_size=4, num_pages=4,
+                 window=2, max_seq=12)
+    prompts = [[5, 17, 200, 3], [9, 9, 42, 7]]
+    uids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    done = eng.run_until_idle(max_steps=400)
+    assert set(done) >= set(uids)
+    assert done[uids[1]].preemptions >= 1, \
+        "starved lane was never self-evicted"
+    for p, u in zip(prompts, uids):
+        assert done[u].output == _ref_generate(cfg, params, p, 4)
+
+
+def test_admission_window_backpressure_on_engine(dense_model):
+    """A class with a finite admit_window rejects the overflow (submit
+    returns None) instead of growing without bound, and recovers once the
+    backlog drains."""
+    from repro.sched import QueueClass
+
+    cfg, params = dense_model
+    eng = Engine(cfg, params, max_batch=2, page_size=8, num_pages=32,
+                 window=2, max_seq=32,
+                 classes=[QueueClass("default", admit_window=4)])
+    uids = [eng.submit([i + 1, 2], max_new_tokens=2) for i in range(6)]
+    assert sum(u is not None for u in uids) == 4
+    assert uids[4] is None and uids[5] is None
+    done = eng.run_until_idle(max_steps=200)
+    assert set(done) == {u for u in uids if u is not None}
+    assert eng.pending == 0
+    assert eng.submit([7, 7], max_new_tokens=2) is not None  # window freed
+
+
 def test_overload_burst_drains_pending_counter(dense_model):
     """Batched admission under a pool too small for the burst: every request
     still completes AND the pending counter drains to exactly zero (the

@@ -49,8 +49,7 @@ _SMALL_MESH = textwrap.dedent("""
     from repro.parallel import sharding as S
     from repro.training import optimizer as O
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = dataclasses.replace(get_config("yi_6b", smoke=True),
                               batch_axes=("data",))
     opt_cfg = O.OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
@@ -92,8 +91,7 @@ _COMPRESS = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.parallel.collectives import cross_pod_grad_reduce
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     g = {"w": jnp.linspace(-1.0, 1.0, 64).reshape(8, 8)}
     e = {"w": jnp.zeros((8, 8))}
     out, err = cross_pod_grad_reduce(g, e, mesh)
@@ -123,14 +121,12 @@ _REMESH = textwrap.dedent("""
 
     d = tempfile.mkdtemp()
     # save under a 4x2 mesh layout
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
     w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                        NamedSharding(mesh_a, P("data", "model")))
     C.save(d, 1, {"w": w})
     # restore under a 2x4 mesh (elastic re-mesh)
-    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"))
     sh = {"w": NamedSharding(mesh_b, P("data", "model"))}
     step, state = C.restore(d, {"w": w}, shardings=sh)
     assert state["w"].sharding == sh["w"]

@@ -23,6 +23,7 @@ OPS = st.lists(
 )
 
 
+@pytest.mark.slow
 @settings(max_examples=60, deadline=None)
 @given(ops=OPS, n=st.integers(4, 24))
 def test_slotpool_invariants_hold_for_any_sequence(ops, n):
@@ -63,6 +64,7 @@ def test_slotpool_invariants_hold_for_any_sequence(ops, n):
     assert int(pool.deque_cycle) <= int(pool.enq_cycle)
 
 
+@pytest.mark.slow
 @settings(max_examples=30, deadline=None)
 @given(n=st.integers(4, 32), k=st.integers(1, 8), window=st.integers(0, 10))
 def test_window_blocks_reuse(n, k, window):
@@ -81,6 +83,7 @@ def test_window_blocks_reuse(n, k, window):
         assert not (inside and reused), "slot inside window was reclaimed"
 
 
+@pytest.mark.slow
 @settings(max_examples=30, deadline=None)
 @given(seed=st.integers(0, 10**6), k=st.integers(1, 6))
 def test_claim_kernel_matches_slotpool(seed, k):
