@@ -1,0 +1,99 @@
+"""CI bench-regression gate: compare a fresh `run.py --quick` snapshot
+against the committed BENCH_queue.json baseline and fail (exit 1) when the
+CMP hot path regresses beyond tolerance.
+
+  python benchmarks/run.py --quick --out reports/bench_ci_1.json
+  python benchmarks/run.py --quick --out reports/bench_ci_2.json
+  python benchmarks/check_regression.py --baseline BENCH_queue.json \\
+      --current reports/bench_ci_1.json reports/bench_ci_2.json
+
+Gated metrics: batched CMP throughput (lower is a regression) and
+atomics-per-op (higher is a regression). The atomics gates are counted,
+not timed — deterministic on any runner. Throughput is wall-clock and
+runner-noise-sensitive, so it (a) gates at 2x the base tolerance and
+(b) takes the *best* value across the given --current snapshots: a real
+hot-path regression shows up in every run, noise rarely does twice.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (dotted key, direction, tolerance multiplier): direction is what a
+# REGRESSION looks like. Atomics-per-op are deterministic (counted, not
+# timed) and gate at the base tolerance; wall-clock throughput is runner-
+# noise-sensitive (observed ±15% run-to-run on one machine), so it gets 2x
+# the tolerance — still a gate, calibrated to catch real hot-path damage
+# (the batching regressions it guards were 2x-level) without flaking CI.
+GATES = [
+    ("cmp.batched.items_per_sec", "lower", 2.0),
+    ("cmp.batched.atomics_per_enq", "higher", 1.0),
+    ("cmp.batched.atomics_per_deq", "higher", 1.0),
+    ("cmp.batched.rmw_per_enq", "higher", 1.0),
+    ("cmp.batched.rmw_per_deq", "higher", 1.0),
+    ("cmp.scalar.atomics_per_enq", "higher", 1.0),
+    ("cmp.scalar.atomics_per_deq", "higher", 1.0),
+]
+
+
+def lookup(tree: dict, dotted: str):
+    node = tree
+    for part in dotted.split("."):
+        node = node[part]
+    return float(node)
+
+
+def check(baseline: dict, currents: list, tolerance: float) -> int:
+    failures = 0
+    print(f"{'metric':38s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
+    for key, direction, tol_mult in GATES:
+        try:
+            base = lookup(baseline, key)
+            vals = [lookup(c, key) for c in currents]
+            cur = max(vals) if direction == "lower" else min(vals)
+        except KeyError as e:
+            print(f"{key:38s} MISSING key {e} -> fail")
+            failures += 1
+            continue
+        tol = tolerance * tol_mult
+        ratio = cur / base if base else float("inf")
+        if direction == "lower":
+            bad = cur < base * (1.0 - tol)
+        else:
+            bad = cur > base * (1.0 + tol)
+        verdict = "REGRESSION" if bad else "ok"
+        print(f"{key:38s} {base:12.3f} {cur:12.3f} {ratio:7.3f}  {verdict}"
+              f"{'' if tol_mult == 1.0 else f' (tol {tol:.0%})'}")
+        failures += bad
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_queue.json",
+                    help="committed trajectory baseline")
+    ap.add_argument("--current", nargs="+",
+                    default=["reports/bench_ci.json"],
+                    help="fresh --quick snapshot(s) to gate; with several, "
+                         "each metric takes its best run (noise damping)")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative regression (0.15 = 15%%)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    currents = []
+    for path in args.current:
+        with open(path) as f:
+            currents.append(json.load(f))
+    failures = check(baseline, currents, args.tolerance)
+    if failures:
+        print(f"\n{failures} gated metric(s) regressed more than "
+              f"{args.tolerance:.0%} vs {args.baseline}")
+        sys.exit(1)
+    print(f"\nbench gate clean (tolerance {args.tolerance:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Replica-fabric benchmarks (DESIGN.md §9): drain scaling of N scheduler
+replicas with seat stealing, straggler tolerance, and the exact-seat
+frontier checkpoint round trip (capture / restore latency).
+
+Sized for the 1-core container: per-batch service time is simulated with a
+sleep (which releases the GIL, so replica overlap is real even here), and
+the shapes measured — steal-bounded idle, exact-seat resume — are
+scheduling properties, not hardware ones.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Dict, List
+
+from repro.sched import QueueClass, ReplicaSet, Scheduler
+
+
+def _make_fabric(num_replicas: int, *, num_shards: int = 4,
+                 policy: str = "strict", min_steal: int = 1) -> ReplicaSet:
+    classes = [
+        QueueClass("interactive", priority=2, weight=8.0,
+                   num_shards=num_shards, window=8192),
+        QueueClass("batch", priority=1, weight=3.0, num_shards=num_shards,
+                   window=8192),
+        QueueClass("background", priority=0, weight=1.0,
+                   num_shards=num_shards, window=8192),
+    ]
+    sched = Scheduler(classes, policy=policy)
+    return ReplicaSet(sched, num_replicas, policy=policy, min_steal=min_steal)
+
+
+def _submit_wave(rs: ReplicaSet, items: int) -> Dict[str, int]:
+    per_class = {"interactive": items // 4, "batch": items // 4,
+                 "background": items - 2 * (items // 4)}
+    for name, n in per_class.items():
+        rs.submit_many(name, [(name, i) for i in range(n)])
+    return per_class
+
+
+def replica_scaling(num_replicas: int, *, items: int = 2400,
+                    num_shards: int = 4, drain_k: int = 8,
+                    service_s: float = 0.0015, stealing: bool = True,
+                    straggle_s: float = 0.0) -> Dict:
+    """N replica drain loops over one preloaded 3-class fabric, each paying
+    ``service_s`` of simulated engine-step service per non-empty drain.
+    ``straggle_s`` stalls replica 0 at the start — with stealing on, its
+    seats (whole cycle-runs) migrate to the live replicas via owner-CAS
+    claims; with stealing off its backlog waits out the stall. Reports
+    throughput, idle fraction, steal volume, and verifies exactness: per
+    class, the union of replica streams is exactly 0..n-1 and every
+    cycle-run is delivered in order."""
+    rs = _make_fabric(num_replicas, num_shards=num_shards,
+                      min_steal=max(1, drain_k // 4))
+    per_class = _submit_wave(rs, items)
+    total = sum(per_class.values())
+
+    streams: List[List] = [[] for _ in range(num_replicas)]
+    idle_time = [0.0] * num_replicas
+    last_active = [0.0] * num_replicas
+    done = threading.Event()
+    delivered = [0]
+    lock = threading.Lock()
+
+    def work(rid: int):
+        r = rs.replicas[rid]
+        if rid == 0 and straggle_s > 0:
+            time.sleep(straggle_s)
+        while not done.is_set():
+            t_poll = time.perf_counter()
+            got = r.drain(drain_k)
+            if not got:
+                if stealing and r.steal_if_starved():
+                    continue  # claimed a run: drain it before yielding
+                time.sleep(0.0002)
+                idle_time[rid] += time.perf_counter() - t_poll
+                continue
+            time.sleep(service_s)  # simulated engine step (releases the GIL)
+            streams[rid].extend((v.name, env.seq) for v, env in got)
+            last_active[rid] = time.perf_counter()
+            with lock:
+                delivered[0] += len(got)
+                if delivered[0] >= total:
+                    done.set()
+
+    ts = [threading.Thread(target=work, args=(rid,))
+          for rid in range(num_replicas)]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    done.wait(timeout=120)
+    wall = time.perf_counter() - t0
+    done.set()
+    for t in ts:
+        t.join(timeout=5)
+
+    # exactness: per class the replica streams merge to exactly 0..n-1,
+    # and every cycle-run (seq mod num_shards) is delivered in order
+    for name, n in per_class.items():
+        seqs = sorted(s for st in streams for c, s in st if c == name)
+        assert seqs == list(range(n)), (
+            f"{name}: lost/duplicated seats ({len(seqs)} of {n})")
+        for st in streams:
+            for shard in range(num_shards):
+                run = [s for c, s in st
+                       if c == name and s % num_shards == shard]
+                assert run == sorted(run), f"{name} run {shard} reordered"
+
+    end = t0 + wall
+    dark = sum(max(0.0, end - (la if la > 0.0 else t0))
+               for la in last_active)
+    return {
+        "num_replicas": num_replicas,
+        "stealing": stealing,
+        "straggle_s": straggle_s,
+        "items": total,
+        "wall_s": wall,
+        "items_per_sec": total / max(wall, 1e-9),
+        "idle_frac": sum(idle_time) / max(num_replicas * wall, 1e-9),
+        "dark_tail_frac": dark / max(num_replicas * wall, 1e-9),
+        "steals": sum(r.steals for r in rs.replicas),
+        "stolen_cycles": sum(r.stolen_cycles for r in rs.replicas),
+        "exact_order": True,
+    }
+
+
+def recovery_roundtrip(*, items: int = 6000, num_shards: int = 8,
+                       num_replicas: int = 4, drain_frac: float = 0.4,
+                       drain_k: int = 16) -> Dict:
+    """The checkpoint round trip, timed: drain part of a wave, capture the
+    exact-seat frontier snapshot (`ReplicaSet.state`), rebuild a fresh
+    fabric from its JSON encoding (`from_state`), drain the rest, and
+    verify every class resumed at its exact seat."""
+    rs = _make_fabric(num_replicas, num_shards=num_shards)
+    per_class = _submit_wave(rs, items)
+    total = sum(per_class.values())
+
+    seen: Dict[str, List[int]] = {n: [] for n in per_class}
+    target = int(total * drain_frac)
+    got_n = 0
+    while got_n < target:
+        for r in rs.replicas:
+            for v, env in r.drain(drain_k):
+                seen[v.name].append(env.seq)
+                got_n += 1
+
+    t0 = time.perf_counter()
+    state = rs.state()
+    capture_s = time.perf_counter() - t0
+    blob = json.dumps(state)
+
+    t0 = time.perf_counter()
+    rs2 = ReplicaSet.from_state(json.loads(blob), window=8192)
+    restore_s = time.perf_counter() - t0
+
+    stall = 0
+    while rs2.pending() > 0 and stall < 10000:
+        got_round = 0
+        for r in rs2.replicas:
+            for v, env in r.drain(drain_k):
+                seen[v.name].append(env.seq)
+                got_round += 1
+        stall = 0 if got_round else stall + 1
+
+    exact = all(sorted(seen[n]) == list(range(per_class[n]))
+                for n in per_class)
+    return {
+        "items": total,
+        "drained_before": got_n,
+        "capture_ms": capture_s * 1e3,
+        "restore_ms": restore_s * 1e3,
+        "snapshot_bytes": len(blob),
+        "resume_exact": exact,
+    }

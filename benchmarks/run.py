@@ -21,8 +21,6 @@ import os
 import sys
 import time
 
-import numpy as np
-
 
 def _emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
@@ -267,6 +265,54 @@ def bench_sched(full: bool, out_path: str = "BENCH_queue.json") -> None:
     # delivery) is the scheduling-noise-immune idleness signal.
 
 
+def bench_replica(full: bool, out_path: str = "BENCH_queue.json") -> None:
+    """Replica fabric (DESIGN.md §9): drain scaling at N=1/2/4 replicas,
+    straggler tolerance with seat stealing on vs off, and the exact-seat
+    checkpoint round trip. Merges into BENCH_queue.json under "replica"."""
+    from benchmarks.replica_bench import recovery_roundtrip, replica_scaling
+
+    items = 4800 if full else 2400
+    result = {"scaling": {}, "straggler": {}, "recovery": {}}
+    for n in (1, 2, 4):
+        r = replica_scaling(n, items=items)
+        result["scaling"][str(n)] = r
+        _emit(f"replica/scaling/{n}R", 1e6 / r["items_per_sec"],
+              f"items_per_sec={r['items_per_sec']:.0f},"
+              f"idle_frac={r['idle_frac']:.3f},steals={r['steals']}")
+    for stealing in (False, True):
+        r = replica_scaling(4, items=items, straggle_s=0.25,
+                            stealing=stealing)
+        result["straggler"]["with" if stealing else "without"] = r
+        _emit(f"replica/straggler/steal_{'on' if stealing else 'off'}",
+              1e6 / r["items_per_sec"],
+              f"dark_tail_frac={r['dark_tail_frac']:.3f},"
+              f"idle_frac={r['idle_frac']:.3f},steals={r['steals']},"
+              f"stolen_cycles={r['stolen_cycles']}")
+    rec = recovery_roundtrip(items=2 * items)
+    result["recovery"] = rec
+    _emit("replica/recovery/capture", rec["capture_ms"] * 1e3,
+          f"snapshot_bytes={rec['snapshot_bytes']}")
+    _emit("replica/recovery/restore", rec["restore_ms"] * 1e3,
+          f"resume_exact={rec['resume_exact']}")
+
+    # Persist first (a flaky sanity check must not discard the run's data).
+    _merge_bench_json(out_path, {"replica": result})
+    print(f"# merged replica results into {out_path}", file=sys.stderr)
+
+    # Tentpole claims, self-asserting: every scaling/straggler run already
+    # proved exact class-cycle delivery (replica_scaling asserts it);
+    # 4-replica steal-rebalanced idle must be within 2x of a single drain
+    # loop, and the checkpoint round trip must resume every seat exactly.
+    r1, r4 = result["scaling"]["1"], result["scaling"]["4"]
+    assert r4["idle_frac"] <= 2.0 * r1["idle_frac"] + 0.02, (
+        f"4-replica idle_frac {r4['idle_frac']:.3f} vs single-drain "
+        f"{r1['idle_frac']:.3f}: stealing did not bound idleness")
+    on, off = result["straggler"]["with"], result["straggler"]["without"]
+    assert on["dark_tail_frac"] < off["dark_tail_frac"], \
+        "seat stealing did not bound the straggler's dark tail"
+    assert rec["resume_exact"], "checkpoint resume lost or reordered seats"
+
+
 def bench_quick(out_path: str = "BENCH_queue.json") -> None:
     """--quick: scalar-vs-batched throughput + atomics-per-op for all four
     queue kinds, written to BENCH_queue.json so the bench trajectory is
@@ -319,6 +365,7 @@ SECTIONS = {
     "dev": bench_device,
     "engine": bench_engine,
     "sched": bench_sched,
+    "replica": bench_replica,
 }
 
 
@@ -329,18 +376,26 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated sections")
     ap.add_argument("--quick", action="store_true",
                     help="scalar-vs-batched queue snapshot -> BENCH_queue.json")
+    ap.add_argument("--out", default="BENCH_queue.json",
+                    help="trajectory-json path for the sections that "
+                         "merge-write one (quick/sched/replica); CI points "
+                         "this elsewhere to compare against the committed "
+                         "baseline")
     args = ap.parse_args()
     os.makedirs("reports", exist_ok=True)
     print("name,us_per_call,derived")
     if args.quick:
-        bench_quick()
+        bench_quick(args.out)
         return
     only = set(args.only.split(",")) if args.only else None
     for name, fn in SECTIONS.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
-        fn(args.full)
+        if name in ("sched", "replica"):
+            fn(args.full, out_path=args.out)
+        else:
+            fn(args.full)
 
 
 if __name__ == "__main__":

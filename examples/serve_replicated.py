@@ -1,0 +1,103 @@
+"""Sharded engine replicas with steal-rebalanced drains and exact-seat
+frontier checkpointing (DESIGN.md §9).
+
+  PYTHONPATH=src python examples/serve_replicated.py [--replicas 2]
+
+Two engine replicas serve a 3-class wave from one fabric: each replica owns
+a seat subset of every class (its own lanes, its own page pool, its own
+policy drain) and a starved replica steals a whole cycle-run with one CAS.
+Mid-wave the demo takes an exact-seat frontier checkpoint, kills the whole
+group (replica crash), restores from the snapshot, and finishes the wave —
+every tenant resumes at its exact FIFO seat; nothing is lost or served
+twice.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                                  # noqa: E402
+
+from repro.checkpoint.checkpointer import (restore_aux,     # noqa: E402
+                                           save)
+from repro.configs import get_config                        # noqa: E402
+from repro.models import init_params                        # noqa: E402
+from repro.sched import QueueClass                          # noqa: E402
+from repro.serving.engine import EngineReplicaGroup         # noqa: E402
+
+
+def make_classes(num_shards):
+    return [
+        QueueClass("interactive", priority=2, weight=8.0,
+                   num_shards=num_shards),
+        QueueClass("batch", priority=1, weight=3.0, num_shards=num_shards),
+        QueueClass("background", priority=0, weight=1.0,
+                   num_shards=num_shards),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/serve_replicated_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("glm4-9b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    grp = EngineReplicaGroup(cfg, params, num_replicas=args.replicas,
+                             max_batch=2 * args.replicas, page_size=8,
+                             num_pages=24 * args.replicas, window=3,
+                             max_seq=64, classes=make_classes(args.replicas))
+
+    t0 = time.time()
+    uids, tenant_of = [], {}
+    wave = [("interactive", 4), ("batch", 4), ("background", 4)]
+    for name, n in wave:
+        for u in grp.submit_many([[10 + i, 3, 7] for i in range(n)],
+                                 max_new_tokens=4, qclass=name):
+            uids.append(u)
+            tenant_of[u] = name
+
+    for _ in range(2):  # part of the wave decodes...
+        grp.step()
+    step, state = grp.step_count, grp.sched_state()
+    save(args.ckpt_dir, step, {}, aux={"sched": state})  # ...then: snapshot,
+    done_before = dict(grp.completed)
+    del grp                                              # crash,
+
+    ck_step, aux = restore_aux(args.ckpt_dir)            # restore.
+    assert ck_step == step and aux is not None
+    grp2 = EngineReplicaGroup.from_sched_state(
+        cfg, params, aux["sched"], max_batch=2 * args.replicas, page_size=8,
+        num_pages=24 * args.replicas, window=3, max_seq=64)
+    pending = grp2.replica_set.pending()
+    done_after = grp2.run_until_idle(max_steps=400)
+    dt = time.time() - t0
+
+    served = {**done_before, **done_after}
+    missing = [u for u in uids if u not in served]
+    dup = [u for u in done_before if u in done_after]
+    assert not missing, f"lost across restore: {missing}"
+    assert not dup, f"served twice across restore: {dup}"
+    print(f"replicas={args.replicas}  wall={dt:.1f}s  "
+          f"checkpoint@step {step} ({pending} seats resumed)")
+    for name, _ in wave:
+        mine = sorted(u for u in uids if tenant_of[u] == name)
+        state_cls = aux["sched"]["classes"][name]
+        print(f"  {name:12s} served={sum(1 for u in mine if u in served)}"
+              f"/{len(mine)} ckpt(seq={state_cls['seq']} "
+              f"frontier={state_cls['frontier']} "
+              f"requeued={len(state_cls['requeue'])})")
+    for rid, r in grp2.replica_stats().items():
+        print(f"  replica {rid}: steals={r['steals']} "
+              f"stolen_cycles={r['stolen_cycles']} "
+              f"empty_drains={r['empty_drains']}")
+    print("every tenant resumed at its exact FIFO seat; "
+          f"{len(done_before)} served pre-crash, {len(done_after)} post-restore")
+
+
+if __name__ == "__main__":
+    main()

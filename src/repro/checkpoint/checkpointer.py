@@ -37,13 +37,24 @@ def _tree_paths(tree) -> list:
     return out
 
 
-def save(ckpt_dir: str, step: int, state: Dict[str, Any]) -> str:
-    """state: arbitrary pytree dict (params, opt_state, data_state, ...)."""
+def save(ckpt_dir: str, step: int, state: Dict[str, Any],
+         aux: Optional[Dict[str, Any]] = None) -> str:
+    """state: arbitrary pytree dict (params, opt_state, data_state, ...).
+
+    ``aux`` is an optional JSON-able side-channel saved atomically with the
+    same step — scheduler frontier snapshots (``QueueClass.state()`` /
+    ``ReplicaSet.state()``), data-pipeline cursors, uid counters: the
+    exact-seat resume state that is *structure*, not arrays. It rides the
+    same tmp-dir + rename, so a step either has both its leaves and its
+    frontiers or neither."""
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
     final = os.path.join(ckpt_dir, f"step_{step}")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
+    if aux is not None:
+        with open(os.path.join(tmp, "aux.json"), "w") as f:
+            json.dump(aux, f)
 
     manifest = {"step": step, "leaves": []}
     host_state = jax.device_get(state)
@@ -75,6 +86,20 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     with open(p) as f:
         return int(f.read().strip())
+
+
+def restore_aux(ckpt_dir: str, step: Optional[int] = None
+                ) -> Tuple[int, Optional[Dict[str, Any]]]:
+    """Load the aux (frontier) side-channel of a checkpoint; None when the
+    step was saved without one."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    p = os.path.join(ckpt_dir, f"step_{step}", "aux.json")
+    if not os.path.exists(p):
+        return step, None
+    with open(p) as f:
+        return step, json.load(f)
 
 
 def restore(ckpt_dir: str, template: Dict[str, Any], step: Optional[int] = None,
@@ -123,15 +148,29 @@ class AsyncCheckpointer:
         self._writer = threading.Thread(target=self._run, daemon=True)
         self._writer.start()
 
-    def submit(self, step: int, state: Dict[str, Any]) -> bool:
-        """Never blocks. Returns False if dropped (writer lag > window)."""
+    def submit(self, step: int, state: Dict[str, Any],
+               aux: Optional[Dict[str, Any]] = None) -> bool:
+        """Never blocks. Returns False if dropped (writer lag > window).
+
+        ``aux`` (frontier snapshots etc.) is deep-copied through JSON at
+        submit time, so the caller's live scheduler state may keep mutating
+        while the writer drains — the async part is only the file I/O."""
+        if aux is not None:
+            # Deep-copy (and fail on non-JSON-able aux) BEFORE reserving a
+            # window slot — a raise here must not leak the reservation.
+            aux = json.loads(json.dumps(aux))
         with self._lock:
             if self._pending >= self.window:
                 self.dropped += 1
                 return False
             self._pending += 1
-        snapshot = jax.device_get(state)  # host copy: device buffers reusable
-        self._q.put((step, snapshot))
+        try:
+            snapshot = jax.device_get(state)  # host copy: buffers reusable
+            self._q.put((step, snapshot, aux))
+        except BaseException:
+            with self._lock:
+                self._pending -= 1
+            raise
         return True
 
     def _run(self) -> None:
@@ -139,9 +178,9 @@ class AsyncCheckpointer:
             item = self._q.get()
             if item is None:
                 return
-            step, snapshot = item
+            step, snapshot, aux = item
             try:
-                save(self.ckpt_dir, step, snapshot)
+                save(self.ckpt_dir, step, snapshot, aux=aux)
                 self.written.append(step)
             finally:
                 with self._lock:

@@ -25,7 +25,7 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.core.cmp import CMPQueue
-from repro.sched.classes import ShardSet, shard_for
+from repro.sched.classes import ShardSet
 from repro.sched.steal import ShardConsumer
 
 
@@ -174,8 +174,22 @@ class DataPipeline:
 
     @classmethod
     def from_state(cls, state: Dict, **kw) -> "DataPipeline":
-        return cls(seed=state["seed"], start_cursors=state["cursors"],
+        """Resume from `state()`. The producer count is implied by the
+        cursor vector; a `num_producers` kwarg is deduped against it (an
+        explicit mismatch is a config error, not a silent reshard — resharding
+        producers would re-map every batch_id to a different producer)."""
+        num_producers = kw.pop("num_producers", None)
+        if num_producers is not None and num_producers != len(state["cursors"]):
+            raise ValueError(
+                f"from_state got num_producers={num_producers} but the "
+                f"checkpoint has {len(state['cursors'])} producer cursors")
+        pipe = cls(seed=state["seed"], start_cursors=state["cursors"],
                    num_producers=len(state["cursors"]), **kw)
+        # Round-trip invariant: a freshly resumed pipeline checkpoints to
+        # exactly the state it was built from.
+        assert pipe.state() == {"cursors": list(state["cursors"]),
+                                "seed": state["seed"]}, "resume round-trip"
+        return pipe
 
     def steal_stats(self) -> Dict:
         """Consumer-side steal telemetry (zero added atomics)."""

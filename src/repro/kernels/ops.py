@@ -8,7 +8,6 @@ to Mosaic. Model code calls these; layouts are adapted here.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import cmp_claim as _claim
 from repro.kernels import flash_attention as _fa

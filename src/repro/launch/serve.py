@@ -7,6 +7,10 @@ with optional multi-tenant priority classes (the sched fabric).
   # 3-class mixed traffic (interactive/batch/background) under a policy:
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --multitenant --policy wfq --requests 9
+
+  # 2 steal-rebalanced engine replicas with frontier checkpointing:
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
+      --multitenant --replicas 2 --checkpoint-dir /tmp/serve_ckpt
 """
 
 from __future__ import annotations
@@ -32,7 +36,19 @@ def main() -> None:
     ap.add_argument("--policy", default="strict",
                     choices=("strict", "wfq", "fifo"),
                     help="cross-class drain policy (with --multitenant)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="N steal-rebalanced engine replicas, each owning a "
+                         "shard subset of every class and a 1/N lane+page "
+                         "budget (DESIGN.md §9)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="frontier-checkpoint directory: resumes every "
+                         "tenant at its exact FIFO seat if a snapshot "
+                         "exists, and writes one at exit (replica mode)")
     args = ap.parse_args()
+    if args.checkpoint_dir and args.checkpoint_dir == args.ckpt_dir:
+        ap.error("--checkpoint-dir (frontier snapshots) must differ from "
+                 "--ckpt-dir (model params): a frontier-only step would "
+                 "shadow the params checkpoint's `latest`")
 
     import jax
     from repro.configs import get_config
@@ -47,15 +63,56 @@ def main() -> None:
         _, state = C.restore(args.ckpt_dir, {"params": params})
         params = state["params"]
 
+    shards = max(1, args.replicas)
     classes = None
     if args.multitenant:
-        classes = [QueueClass("interactive", priority=2, weight=8.0),
-                   QueueClass("batch", priority=1, weight=3.0),
-                   QueueClass("background", priority=0, weight=1.0)]
-    eng = Engine(cfg, params, max_batch=args.max_batch,
-                 page_size=args.page_size, num_pages=args.num_pages,
-                 window=args.window, max_seq=256,
-                 classes=classes, policy=args.policy)
+        classes = [QueueClass("interactive", priority=2, weight=8.0,
+                              num_shards=shards),
+                   QueueClass("batch", priority=1, weight=3.0,
+                              num_shards=shards),
+                   QueueClass("background", priority=0, weight=1.0,
+                              num_shards=shards)]
+    if args.replicas > 1:
+        from repro.checkpoint.checkpointer import latest_step, restore_aux
+        from repro.serving.engine import EngineReplicaGroup
+        eng_kw = dict(max_batch=args.max_batch, page_size=args.page_size,
+                      num_pages=args.num_pages, max_seq=256)
+        needed = set(c.name for c in classes) if classes else {"default"}
+        resumed = None
+        if args.checkpoint_dir and latest_step(args.checkpoint_dir) is not None:
+            step, aux = restore_aux(args.checkpoint_dir)
+            if aux is not None and "sched" in aux:
+                have = set(aux["sched"]["classes"])
+                if needed <= have:
+                    eng = EngineReplicaGroup.from_sched_state(
+                        cfg, params, aux["sched"], policy=args.policy,
+                        window=args.window, **eng_kw)
+                    resumed = step
+                else:
+                    print(f"[serve] WARNING: frontier checkpoint has classes "
+                          f"{sorted(have)} but this run needs "
+                          f"{sorted(needed)}; starting fresh (snapshot left "
+                          f"untouched)")
+        if resumed is None:
+            eng = EngineReplicaGroup(cfg, params, num_replicas=args.replicas,
+                                     window=args.window, classes=classes,
+                                     policy=args.policy, **eng_kw)
+        else:
+            # the snapshot fixes the replica count (seat ownership is part
+            # of the frontier state) — a differing --replicas is not a
+            # silent reshard
+            if len(eng.engines) != args.replicas:
+                print(f"[serve] WARNING: --replicas {args.replicas} ignored; "
+                      f"checkpoint was taken with {len(eng.engines)} "
+                      f"replicas (reseat is a future roadmap item)")
+            print(f"[serve] resumed {len(eng.engines)} replicas from "
+                  f"frontier checkpoint step {resumed}: "
+                  f"{eng.replica_set.pending()} seats pending")
+    else:
+        eng = Engine(cfg, params, max_batch=args.max_batch,
+                     page_size=args.page_size, num_pages=args.num_pages,
+                     window=args.window, max_seq=256,
+                     classes=classes, policy=args.policy)
     tenant_cycle = ("interactive", "batch", "background")
     rng = jax.random.PRNGKey(42)
     uids, tenant_of = [], {}
@@ -77,14 +134,29 @@ def main() -> None:
         r = done[u]
         print(f"[serve] req {u} ({tenant_of[u]}): {len(r.output)} tokens "
               f"(preemptions={r.preemptions}) -> {r.output[:8]}")
+    if args.replicas > 1:
+        free = sum(e.pool.free_pages() for e in eng.engines)
+        total = sum(e.pool.num_pages for e in eng.engines)
+    else:
+        free, total = eng.pool.free_pages(), eng.pool.num_pages
     print(f"[serve] {len(uids)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s); engine steps={eng.step_count}; "
-          f"free pages={eng.pool.free_pages()}/{eng.pool.num_pages}")
+          f"free pages={free}/{total}")
+    if args.replicas > 1:
+        for rid, rstats in eng.replica_stats().items():
+            print(f"[serve] replica {rid}: steals={rstats['steals']} "
+                  f"stolen_cycles={rstats['stolen_cycles']} "
+                  f"empty_drains={rstats['empty_drains']}")
     if args.multitenant:
-        for name, snap in eng.class_stats().items():
-            print(f"[serve] class {name}: submitted={snap['submitted']} "
-                  f"requeued={snap['requeued']} "
-                  f"p50_ms={snap['admit_p50_ms']} p99_ms={snap['admit_p99_ms']}")
+        for name, cs in eng.class_stats().items():
+            print(f"[serve] class {name}: submitted={cs['submitted']} "
+                  f"requeued={cs['requeued']} "
+                  f"p50_ms={cs['admit_p50_ms']} p99_ms={cs['admit_p99_ms']}")
+    if args.replicas > 1 and args.checkpoint_dir:
+        from repro.checkpoint.checkpointer import save
+        path = save(args.checkpoint_dir, eng.step_count, {},
+                    aux={"sched": eng.sched_state()})
+        print(f"[serve] frontier checkpoint written: {path}")
 
 
 if __name__ == "__main__":

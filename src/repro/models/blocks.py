@@ -11,7 +11,6 @@ builds the per-layer cache for decoding.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ step is a pure function of locally-resident shards; no host-side barriers.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

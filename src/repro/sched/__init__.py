@@ -8,6 +8,9 @@ queue fabric (DESIGN.md §8).
     FIFO-across-classes drain policies.
   - :mod:`repro.sched.steal`   — work stealing between shards (a steal is a
     claim; window safety is inherited from the protection domain).
+  - :mod:`repro.sched.replica` — N scheduler replicas over one fabric
+    (DESIGN.md §9): seat ownership claimed by CAS, per-replica frontier
+    merges, exact-seat checkpoint/restore.
   - :mod:`repro.sched.stats`   — per-class occupancy/latency/steal telemetry
     sampled from domain state, zero added atomics.
 """
@@ -16,12 +19,17 @@ from repro.sched.classes import (Envelope, QueueClass, Scheduler, ShardSet,
                                  shard_for)
 from repro.sched.policy import (ClassFifo, DrainPolicy, StrictPriority,
                                 WeightedFair, make_policy)
-from repro.sched.stats import ClassStats, LatencyWindow
-from repro.sched.steal import ShardConsumer, queue_depth, rebalance, steal_into
+from repro.sched.replica import (ClassView, ReplicaSet, SchedulerReplica,
+                                 ShardSeat)
+from repro.sched.stats import (ClassStats, LatencyWindow,
+                               aggregate_class_snapshots)
+from repro.sched.steal import (ShardConsumer, claim_seat, queue_depth,
+                               rebalance, steal_into)
 
 __all__ = [
     "Envelope", "QueueClass", "Scheduler", "ShardSet", "shard_for",
     "DrainPolicy", "StrictPriority", "WeightedFair", "ClassFifo",
-    "make_policy", "ClassStats", "LatencyWindow",
-    "ShardConsumer", "queue_depth", "rebalance", "steal_into",
+    "make_policy", "ClassStats", "LatencyWindow", "aggregate_class_snapshots",
+    "ShardConsumer", "queue_depth", "rebalance", "steal_into", "claim_seat",
+    "ClassView", "ReplicaSet", "SchedulerReplica", "ShardSeat",
 ]

@@ -72,6 +72,24 @@ def shard_for(key: int, num_shards: int) -> int:
     return (int(key) * 2654435761 % (1 << 32)) % num_shards
 
 
+def encode_envelopes(envs: Iterable[Envelope], encode=None) -> List[list]:
+    """Checkpoint wire format for envelopes: ``[seq, stamp, payload]``
+    records, seat-sorted. ``encode`` maps payloads to JSON-able values
+    (default identity). Shared by the single-drain and replica codecs so
+    the format cannot drift between them."""
+    enc = encode or (lambda p: p)
+    return [[e.seq, e.stamp, enc(e.payload)] for e in sorted(envs)]
+
+
+def decode_envelope(rec: list, decode=None, *, now: float = None) -> Envelope:
+    """Inverse of :func:`encode_envelopes` for one record. ``t_submit`` is
+    reset to ``now`` — the old process's monotonic clock is meaningless
+    here, and latency telemetry should count from the restore."""
+    dec = decode or (lambda p: p)
+    return Envelope(rec[0], rec[1],
+                    time.monotonic() if now is None else now, dec(rec[2]))
+
+
 def queue_depth(q: CMPQueue) -> int:
     """Unclaimed-depth estimate for one CMP queue, read from the domain
     counters alone (enqueue cycle − protection boundary): zero added
@@ -130,6 +148,7 @@ class QueueClass:
         self.priority = int(priority)
         self.weight = float(weight)
         self.admit_window = admit_window
+        self._queue_kw = dict(queue_kw)  # retained for checkpointing
         self.shards = ShardSet(num_shards, **queue_kw)
         self._seq = AtomicCell(0)      # class cycle: submit linearization point
         self._inflight = AtomicCell(0)  # admission-window occupancy (atomic)
@@ -249,6 +268,98 @@ class QueueClass:
         self.stats.delivered += len(out)
         return out
 
+    # ---------------------------------------------------------- checkpoint
+    def _capture_pending(self) -> int:
+        """Claim every spliced-but-undelivered envelope into the staging map
+        (delivery order is unaffected: the drain already serves the stage).
+        Returns the number of seats in [frontier, seq) that could *not* be
+        captured — nonzero only when a producer is mid-submit, the same
+        head-of-line contract as `drain`."""
+        spins = 0
+        while True:
+            missing = (self._seq.load() - self._frontier) - len(self._stage)
+            if missing <= 0:
+                return 0
+            if self._stage_from_shards(missing) == 0:
+                spins += 1
+                if spins > _GAP_PATIENCE:
+                    return missing
+                cpu_pause()
+            else:
+                spins = 0
+
+    def _meta_state(self) -> dict:
+        """The class-identity + cycle-counter half of a snapshot, shared by
+        the single-drain and replica codecs. ``queue_kw`` (the shards'
+        CMPQueue configuration — window, reclaim cadence, …) is captured so
+        a restore rebuilds the *same* protection behavior, not a guessed
+        one. ``deque_cycles`` (the shards' protection boundaries) rides
+        along as *diagnostics only*: restore rebuilds fresh shards and
+        re-enqueues the captured envelopes, so queue-internal counters
+        restart at zero by design."""
+        return {
+            "name": self.name,
+            "priority": self.priority,
+            "weight": self.weight,
+            "admit_window": self.admit_window,
+            "num_shards": len(self.shards),
+            "queue_kw": dict(self._queue_kw),
+            "seq": self._seq.load(),
+            "deque_cycles": [q.deque_cycle.load() for q in self.shards.queues],
+        }
+
+    @classmethod
+    def _from_meta(cls, state: dict, **queue_kw) -> "QueueClass":
+        """Rebuild the class identity; shard CMPQueue config comes from the
+        snapshot, with caller kwargs as explicit overrides."""
+        merged = {**state.get("queue_kw", {}), **queue_kw}
+        qc = cls(state["name"], priority=state["priority"],
+                 weight=state["weight"], num_shards=state["num_shards"],
+                 admit_window=state["admit_window"], **merged)
+        qc._seq.store(state["seq"])
+        return qc
+
+    def state(self, *, encode=None) -> dict:
+        """Exact-seat frontier snapshot: ``(class seq, frontier, requeue
+        heap, staged pending, per-shard deque_cycle)``. Every undelivered
+        envelope is captured (claimed into the stage first), so a restored
+        class resumes each tenant at its exact FIFO seat. The returned dict
+        is plain data — safe to hand to an async checkpoint writer while
+        this class keeps draining. Exact when producers are quiesced (a
+        producer mid-submit is reported in ``gaps``, and its item — not yet
+        spliced anywhere — cannot be captured by anyone).
+
+        ``encode`` maps payloads to JSON-able values (default: identity).
+        """
+        gaps = self._capture_pending()
+        return {
+            **self._meta_state(),
+            "frontier": self._frontier,
+            "gaps": gaps,
+            "requeue": encode_envelopes(self._requeue, encode),
+            "stage": encode_envelopes(self._stage.values(), encode),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, *, decode=None, **queue_kw) -> "QueueClass":
+        """Rebuild a class at its checkpointed seats: the cycle counter,
+        drain frontier and every undelivered envelope resume exactly where
+        `state` captured them (staged items re-enter their home shard
+        ``seq % S``; requeued seats are served first, as before)."""
+        qc = cls._from_meta(state, **queue_kw)
+        qc._frontier = state["frontier"]
+        if qc.admit_window is not None:
+            # window seats are freed at first delivery; everything in
+            # [frontier, seq) is still occupying one
+            qc._inflight.store(max(0, state["seq"] - state["frontier"]))
+        now = time.monotonic()
+        for rec in state["requeue"]:
+            heapq.heappush(qc._requeue, decode_envelope(rec, decode, now=now))
+        for rec in state["stage"]:
+            env = decode_envelope(rec, decode, now=now)
+            qc.shards.queues[env.seq % len(qc.shards)].enqueue(env)
+        return qc
+
     # ------------------------------------------------------------ telemetry
     def snapshot(self) -> dict:
         return self.stats.snapshot(pending=self.pending(),
@@ -287,7 +398,7 @@ class Scheduler:
         return self.policy.drain(self.classes, k)
 
     def pending(self) -> int:
-        return sum(c.pending() for c in self.classes)
+        return sum(c.pending() for c in self.classes) + self.policy.held()
 
     def snapshot(self) -> dict:
         return {c.name: c.snapshot() for c in self.classes}

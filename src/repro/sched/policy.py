@@ -39,6 +39,18 @@ class DrainPolicy:
     def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
         raise NotImplementedError
 
+    def held(self) -> int:
+        """Envelopes drained from their class but not yet handed out (some
+        policies buffer class heads between calls). Counted as pending by
+        the scheduler's emptiness check."""
+        return 0
+
+    def held_items(self) -> Drained:
+        """The buffered ``(qclass, envelope)`` pairs behind :meth:`held` —
+        checkpointing records them as requeued seats (their class cursor
+        already advanced past them, exactly like a preempted lane)."""
+        return []
+
 
 class StrictPriority(DrainPolicy):
     honors_priority = True
@@ -115,6 +127,12 @@ class ClassFifo(DrainPolicy):
 
     def __init__(self):
         self._heads: Dict[str, Tuple[QueueClass, Envelope]] = {}
+
+    def held(self) -> int:
+        return len(self._heads)
+
+    def held_items(self) -> Drained:
+        return list(self._heads.values())
 
     def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
         out: Drained = []

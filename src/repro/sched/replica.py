@@ -1,0 +1,475 @@
+"""Sharded scheduler replicas: N drain loops over one class fabric
+(DESIGN.md §9).
+
+PR 2 made the fabric many-producer but left it one-consumer: a single
+policy drain loop feeds the engine, and that loop is the scalability
+ceiling the paper says a CMP system should not have. This module splits the
+*consumer* side into N :class:`SchedulerReplica`\\ s, each owning a subset of
+every class's shards and running its own policy drain — no replica ever
+waits on another. Two CMP ideas carry the whole design:
+
+  * **Ownership is a claim.** Each (class, shard) pair has a
+    :class:`ShardSeat` whose ``owner`` field is a single CAS-published cell.
+    A starved replica *steals the seat* — one CAS, no handshake, no victim
+    participation — and with it the shard's entire cycle-run, past and
+    future (placement is ``seq % S``, so a seat carries the arithmetic
+    sequence ``s, s+S, s+2S, …`` of class cycles forever). Stealing items
+    one batch at a time would poke holes in a peer's frontier arithmetic;
+    stealing the seat moves the *run*, which is exactly the granularity at
+    which class-cycle order is preserved.
+  * **The seat cursor makes delivery exact.** ``ShardSeat.next_seat`` is
+    the next undelivered class cycle of that shard. Only the replica
+    holding the claimed envelope for that cycle advances the cursor
+    (the queue's claim CAS already made holding exclusive, so the advance
+    needs no CAS of its own). A replica's drain is a frontier merge over
+    its owned seats: always deliver the lowest pending cycle it owns.
+
+Ordering contract: *within every shard's cycle-run, delivery is exactly the
+class-cycle order; across the fabric, each class's seats are delivered
+exactly once, and merging the replica streams by seat recovers the dense
+class-cycle order 0,1,2,….* With static ownership each replica's stream is
+itself seat-monotone; a steal splices a run between replicas but never
+reorders within one, never loses a seat, never delivers one twice.
+
+Crash contract: a replica that dies holding claimed-but-undelivered
+envelopes takes them with it — the same contract as any crashed consumer in
+the paper. Recovery is :meth:`ReplicaSet.state` / :meth:`ReplicaSet.from_state`:
+an exact-seat frontier snapshot (taken at a step boundary, written
+asynchronously) from which every tenant resumes at its exact FIFO seat.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.atomics import AtomicCell, cpu_pause
+from repro.sched.classes import (_GAP_PATIENCE, Envelope, QueueClass,
+                                 Scheduler, decode_envelope,
+                                 encode_envelopes)
+from repro.sched.policy import make_policy
+from repro.sched.steal import claim_seat
+from repro.sched.stats import ClassStats, aggregate_class_snapshots
+
+
+class ShardSeat:
+    """Ownership + delivery cursor for one (class, shard) pair.
+
+    ``owner`` is the replica id currently entitled to drain the shard —
+    CAS-published, so a steal is literally one claim. ``next_seat`` is the
+    next undelivered class cycle of the shard's run (always ≡ shard index
+    mod S); it is advanced with a plain store by whichever replica holds
+    the claimed envelope for that cycle — the queue's claim CAS already
+    made that replica unique, so the cursor needs no second CAS.
+    """
+
+    __slots__ = ("owner", "next_seat")
+
+    def __init__(self, owner: int, shard: int):
+        self.owner = AtomicCell(int(owner))
+        self.next_seat = AtomicCell(int(shard))
+
+
+class ClassView:
+    """One replica's drain view of one :class:`QueueClass`.
+
+    Quacks like a ``QueueClass`` for everything a drain policy or the
+    engine touches (``name``/``priority``/``weight``/``drain``/``pending``/
+    ``requeue``/``snapshot``), but delivers only the cycle-runs of the
+    seats this replica currently owns.
+    """
+
+    def __init__(self, qclass: QueueClass, seats: List[ShardSeat], rid: int):
+        self.qclass = qclass
+        self.seats = seats
+        self.rid = rid
+        self._stride = len(qclass.shards)
+        self._stage: Dict[int, Envelope] = {}  # claimed, awaiting their seat
+        self._requeue: List[Envelope] = []     # preempted (seat already spent)
+        self.stats = ClassStats(qclass.name)
+
+    # ---- QueueClass facade ------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self.qclass.name
+
+    @property
+    def priority(self) -> int:
+        return self.qclass.priority
+
+    @property
+    def weight(self) -> float:
+        return self.qclass.weight
+
+    def owned(self) -> List[int]:
+        return [s for s, seat in enumerate(self.seats)
+                if seat.owner.load() == self.rid]
+
+    def _remaining(self, shard: int) -> int:
+        """Undelivered seats left in one owned shard's cycle-run."""
+        nxt = self.seats[shard].next_seat.load()
+        seq = self.qclass._seq.load()
+        if nxt >= seq:
+            return 0
+        return (seq - nxt + self._stride - 1) // self._stride
+
+    def pending(self) -> int:
+        return (len(self._requeue)
+                + sum(self._remaining(s) for s in self.owned()))
+
+    def requeue(self, env: Envelope) -> None:
+        """Return a delivered envelope (preemption) to *this replica*: its
+        seat was already spent, so it re-enters through the local requeue
+        heap, served before any frontier seat — exactly the QueueClass
+        contract, replica-local."""
+        heapq.heappush(self._requeue, env)
+        self.stats.requeued += 1
+
+    # ---- drain ------------------------------------------------------------
+    def _release_lost(self) -> None:
+        """Republish staged envelopes whose seat was stolen out from under
+        us: one batched re-enqueue into the home shard. The thief's seat
+        cursor (not queue position) drives its delivery order, so a
+        republish at the tail is order-safe."""
+        lost = [e for e in self._stage.values()
+                if self.seats[e.seq % self._stride].owner.load() != self.rid]
+        for env in sorted(lost):
+            del self._stage[env.seq]
+            self.qclass.shards.queues[env.seq % self._stride].enqueue(env)
+
+    def _deliver(self, env: Envelope, first: bool) -> None:
+        qc = self.qclass
+        if first:
+            if qc.admit_window is not None:
+                qc._inflight.fetch_add(-1)  # window seat freed
+            self.stats.record_delivery(env)
+        self.stats.delivered += 1
+
+    def drain(self, k: int) -> List[Envelope]:
+        """Deliver up to ``k`` envelopes: requeued seats first, then the
+        frontier merge over owned seats — always the lowest pending class
+        cycle this replica owns, claimed from its home shard. Never
+        delivers past a gap in a run: a missing seat is a producer
+        mid-submit or a claimed envelope still held by the seat's previous
+        owner (who will deliver it — the cursor advances — or republish
+        it), so we spin briefly and otherwise return short."""
+        out: List[Envelope] = []
+        while self._requeue and len(out) < k:
+            env = heapq.heappop(self._requeue)
+            self._deliver(env, first=False)
+            out.append(env)
+        self._release_lost()
+        queues = self.qclass.shards.queues
+        spins = 0
+        while len(out) < k:
+            best: Optional[Tuple[int, int]] = None  # (next_seat, shard)
+            for s in self.owned():
+                nxt = self.seats[s].next_seat.load()
+                if nxt < self.qclass._seq.load() and \
+                        (best is None or nxt < best[0]):
+                    best = (nxt, s)
+            if best is None:
+                break  # nothing pending in any owned run
+            nxt, s = best
+            env = self._stage.pop(nxt, None)
+            claimed_any = False
+            if env is None:
+                for e in queues[s].dequeue_many(k):
+                    claimed_any = True
+                    if e.seq == nxt:
+                        env = e
+                    else:
+                        self._stage[e.seq] = e
+            if env is None:
+                if claimed_any or self.seats[s].next_seat.load() != nxt:
+                    spins = 0
+                    continue  # progress was made / seat advanced meanwhile
+                spins += 1
+                if spins > _GAP_PATIENCE:
+                    self.stats.gap_waits += 1
+                    break
+                cpu_pause()
+                continue
+            spins = 0
+            # We hold the claimed envelope -> we are the unique advancer.
+            self.seats[s].next_seat.store(nxt + self._stride)
+            self._deliver(env, first=True)
+            out.append(env)
+        return out
+
+    def snapshot(self) -> dict:
+        return self.stats.snapshot(
+            pending=self.pending(),
+            shard_depths=[self.qclass.shards.depth(s) for s in self.owned()])
+
+
+class SchedulerReplica:
+    """One drain loop's worth of the fabric: a policy over per-class views.
+
+    Presents the same surface as :class:`Scheduler` (``drain``/``policy``/
+    ``classes``/``pending``/``snapshot``/``submit``…), so an engine built
+    against the scheduler runs unchanged against a replica. Submissions
+    delegate to the shared fabric — producers never care which replica will
+    drain their item.
+    """
+
+    def __init__(self, rid: int, scheduler: Scheduler,
+                 seats: Dict[str, List[ShardSeat]], *, policy="strict",
+                 min_steal: int = 2):
+        self.rid = rid
+        self.scheduler = scheduler
+        self.policy = make_policy(policy)
+        self.min_steal = int(min_steal)
+        self.views: List[ClassView] = [
+            ClassView(qc, seats[qc.name], rid) for qc in scheduler.classes]
+        self.by_name = {v.name: v for v in self.views}
+        self.steals = 0         # successful seat claims
+        self.stolen_cycles = 0  # pending cycles acquired via steals
+        self.empty_drains = 0   # drain calls that found nothing (idleness)
+
+    # ---- Scheduler facade -------------------------------------------------
+    @property
+    def classes(self) -> List[ClassView]:
+        return self.views
+
+    @property
+    def default_class(self) -> str:
+        return self.scheduler.default_class
+
+    def submit(self, qclass: str, payload: Any) -> Optional[Envelope]:
+        return self.scheduler.submit(qclass, payload)
+
+    def submit_many(self, qclass: str, payloads: Sequence[Any]
+                    ) -> List[Optional[Envelope]]:
+        return self.scheduler.submit_many(qclass, payloads)
+
+    def drain(self, k: int) -> List[Tuple[ClassView, Envelope]]:
+        got = self.policy.drain(self.views, k)
+        if not got:
+            self.empty_drains += 1
+        return got
+
+    def pending(self) -> int:
+        return sum(v.pending() for v in self.views) + self.policy.held()
+
+    def snapshot(self) -> dict:
+        return {v.name: v.snapshot() for v in self.views}
+
+    # ---- stealing ---------------------------------------------------------
+    def steal_if_starved(self) -> int:
+        """Starvation rebalance: when this replica has nothing pending,
+        claim the seat with the deepest remaining cycle-run from the most
+        loaded peer — one CAS on the owner cell, nothing else. Returns the
+        number of pending cycles acquired (0 when not starved, nothing
+        worth stealing, or the CAS lost a race — all fine, try again next
+        step)."""
+        if self.pending() > 0:
+            return 0
+        return self._steal_best()
+
+    def _steal_best(self) -> int:
+        """Pick the victim seat by *unclaimed shard depth* (the domain
+        counters: ``cycle − deque_cycle``), not by cursor arithmetic: depth
+        counts only items physically claimable from the queue, so a seat
+        whose backlog is staged inside a busy peer (claimed, awaiting its
+        turn) is never chosen — stealing it would buy nothing until the
+        peer republishes, and near a wave's tail that hostage-chasing
+        degenerates into seat ping-pong.
+
+        Concurrently starved thieves must also not converge on the single
+        deepest seat (they would steal it from each other faster than any
+        of them drains it — a thundering herd that starves everyone), so
+        each thief indexes into the depth-ranked candidates by its replica
+        id: distinct thieves disperse across distinct runs with no shared
+        scan state."""
+        cands = []
+        for v in self.views:
+            for s, seat in enumerate(v.seats):
+                owner = seat.owner.load()
+                if owner == self.rid:
+                    continue
+                depth = v.qclass.shards.depth(s)
+                if depth >= self.min_steal:
+                    cands.append((depth, id(v), v, s))
+        if not cands:
+            return 0
+        cands.sort(key=lambda c: -c[0])
+        depth, _, v, s = cands[self.rid % len(cands)]
+        if claim_seat(v.seats[s], self.rid):
+            self.steals += 1
+            self.stolen_cycles += v._remaining(s)
+            return depth
+        return 0
+
+
+class ReplicaSet:
+    """N coordination-free scheduler replicas over one class fabric.
+
+    Seat ownership starts round-robin (replica ``s % R`` owns shard ``s`` of
+    every class); from then on it evolves purely through steal CASes. The
+    set is also the checkpoint boundary: :meth:`state` captures an
+    exact-seat frontier snapshot of every class — call it between replica
+    steps (or quiesced) and hand the plain dict to an async writer.
+    """
+
+    def __init__(self, scheduler: Scheduler, num_replicas: int, *,
+                 policy="strict", min_steal: int = 2):
+        assert num_replicas >= 1
+        self.scheduler = scheduler
+        self.num_replicas = int(num_replicas)
+        self.seats: Dict[str, List[ShardSeat]] = {}
+        for qc in scheduler.classes:
+            S = len(qc.shards)
+            assert S >= num_replicas, (
+                f"class {qc.name!r} has {S} shards; needs >= {num_replicas} "
+                f"(one seat per replica)")
+            self.seats[qc.name] = [ShardSeat(s % num_replicas, s)
+                                   for s in range(S)]
+        self.replicas = [
+            SchedulerReplica(rid, scheduler, self.seats, policy=policy,
+                             min_steal=min_steal)
+            for rid in range(self.num_replicas)]
+
+    def submit(self, qclass: str, payload: Any) -> Optional[Envelope]:
+        return self.scheduler.submit(qclass, payload)
+
+    def submit_many(self, qclass: str, payloads: Sequence[Any]
+                    ) -> List[Optional[Envelope]]:
+        return self.scheduler.submit_many(qclass, payloads)
+
+    def pending(self) -> int:
+        return sum(r.pending() for r in self.replicas)
+
+    def rebalance(self) -> int:
+        """One steal pass: every starved replica claims one deep run."""
+        return sum(r.steal_if_starved() for r in self.replicas)
+
+    def snapshot(self) -> dict:
+        out: dict = {"replicas": {}, "classes": {}}
+        for r in self.replicas:
+            out["replicas"][r.rid] = {
+                "steals": r.steals, "stolen_cycles": r.stolen_cycles,
+                "empty_drains": r.empty_drains, "pending": r.pending(),
+                "classes": r.snapshot(),
+            }
+        for qc in self.scheduler.classes:
+            agg = aggregate_class_snapshots(
+                [r.by_name[qc.name].snapshot() for r in self.replicas])
+            # submit-side counters live on the class, not the views
+            agg["submitted"] = qc.stats.submitted
+            agg["rejected"] = qc.stats.rejected
+            out["classes"][qc.name] = agg
+        return out
+
+    # ---- checkpoint -------------------------------------------------------
+    def state(self, *, encode=None) -> dict:
+        """Exact-seat frontier snapshot of the whole fabric: per class the
+        cycle counter, per-seat cursors/owners, and every undelivered
+        envelope (shard leftovers are claimed, recorded, and republished in
+        place — the snapshot consumes nothing). Take it at a step boundary
+        (no replica mid-drain); the returned dict is plain data for an
+        async writer. Restoring resumes every tenant at its exact seat."""
+        out = {"num_replicas": self.num_replicas,
+               "stamp": self.scheduler._stamp.load(),
+               "classes": {}}
+        for qc in self.scheduler.classes:
+            seats = self.seats[qc.name]
+            S = len(qc.shards)
+            seq = qc._seq.load()
+            # every undelivered seat the cursors say exists must be captured
+            expected = sum(
+                (seq - seat.next_seat.load() + S - 1) // S
+                for seat in seats if seat.next_seat.load() < seq)
+            claimed: List[Envelope] = []
+            staged: List[Envelope] = []
+            requeue: List[Envelope] = []
+            for r in self.replicas:
+                v = r.by_name[qc.name]
+                staged.extend(v._stage.values())
+                requeue.extend(v._requeue)
+                # envelopes buffered inside the policy (e.g. a fifo-merge
+                # head pulled but not yet emitted): their seat cursor has
+                # already advanced, so they checkpoint as requeued seats
+                requeue.extend(env for view, env in r.policy.held_items()
+                               if view.name == qc.name)
+            # Claim-accumulate until the cursors' count is covered: a seat
+            # can be momentarily invisible while a producer sits between
+            # its stamp fetch-add and its shard splice — same bounded-spin
+            # head-of-line contract as QueueClass._capture_pending; an
+            # uncaptured seat is reported in ``gaps``, never silent.
+            spins = 0
+            while True:
+                got_any = False
+                for q in qc.shards.queues:
+                    while True:
+                        got = q.dequeue_many(64)
+                        if not got:
+                            break
+                        claimed.extend(got)
+                        got_any = True
+                if len(claimed) + len(staged) >= expected:
+                    break
+                if not got_any:
+                    spins += 1
+                    if spins > _GAP_PATIENCE:
+                        break
+                    cpu_pause()
+            for env in claimed:  # republish in place: snapshot, not drain
+                qc.shards.queues[env.seq % S].enqueue(env)
+            pending = claimed + staged
+            out["classes"][qc.name] = {
+                **qc._meta_state(),
+                "owners": [s.owner.load() for s in seats],
+                "next_seats": [s.next_seat.load() for s in seats],
+                "frontier": min((s.next_seat.load() for s in seats),
+                                default=0),
+                "gaps": max(0, expected - len(pending)),
+                "pending": encode_envelopes(pending, encode),
+                "requeue": encode_envelopes(requeue, encode),
+            }
+        return out
+
+    @classmethod
+    def from_state(cls, state: dict, *, decode=None, policy="strict",
+                   min_steal: int = 2, **queue_kw) -> "ReplicaSet":
+        """Rebuild the fabric at the checkpointed seats: cycle counters,
+        seat cursors and ownership resume exactly; undelivered envelopes
+        re-enter their home shard (``seq % S``); requeued seats land on the
+        replica owning their home seat. Continuing delivers every tenant's
+        remaining items from its exact FIFO seat — nothing lost, nothing
+        reordered within a run."""
+        classes = []
+        for name, cs in state["classes"].items():
+            qc = QueueClass._from_meta(cs, **queue_kw)
+            # keep the Scheduler facade's counters coherent too: its
+            # pending() is frontier-based (under replica management the
+            # authoritative emptiness check is ReplicaSet.pending(), which
+            # reads the live seat cursors)
+            qc._frontier = cs["frontier"]
+            if qc.admit_window is not None:
+                # undelivered (pending) items still hold window seats;
+                # requeued ones freed theirs at first delivery
+                qc._inflight.store(len(cs["pending"]))
+            classes.append(qc)
+        sched = Scheduler(classes, policy=policy)
+        sched._stamp.store(state["stamp"])
+        rs = cls(sched, state["num_replicas"], policy=policy,
+                 min_steal=min_steal)
+        now = time.monotonic()
+        for name, cs in state["classes"].items():
+            qc = sched.by_name[name]
+            S = len(qc.shards)
+            seats = rs.seats[name]
+            for s, (owner, nxt) in enumerate(zip(cs["owners"],
+                                                 cs["next_seats"])):
+                seats[s].owner.store(int(owner))
+                seats[s].next_seat.store(int(nxt))
+            for rec in cs["pending"]:
+                env = decode_envelope(rec, decode, now=now)
+                qc.shards.queues[env.seq % S].enqueue(env)
+            for rec in cs["requeue"]:
+                env = decode_envelope(rec, decode, now=now)
+                rid = seats[env.seq % S].owner.load()
+                rs.replicas[rid].by_name[name].requeue(env)
+        return rs

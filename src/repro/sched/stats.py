@@ -93,3 +93,22 @@ class ClassStats:
             "admit_p50_ms": None if p50 is None else p50 * 1e3,
             "admit_p99_ms": None if p99 is None else p99 * 1e3,
         }
+
+
+def aggregate_class_snapshots(per_replica: List[dict]) -> dict:
+    """Fabric-wide roll-up of one class's per-replica ``ClassStats``
+    snapshots: counters and shard depths add; the latency percentiles are
+    summarized conservatively (worst replica's p99, best replica's p50) —
+    replicas keep independent reservoirs, so exact merged percentiles
+    would need the raw samples."""
+    assert per_replica
+    out = dict(per_replica[0])
+    for snap in per_replica[1:]:
+        for key in ("pending", "submitted", "rejected", "delivered",
+                    "requeued", "gap_waits"):
+            out[key] = out[key] + snap[key]
+        out["shard_depths"] = out["shard_depths"] + snap["shard_depths"]
+        for key, pick in (("admit_p50_ms", min), ("admit_p99_ms", max)):
+            vals = [v for v in (out[key], snap[key]) if v is not None]
+            out[key] = pick(vals) if vals else None
+    return out

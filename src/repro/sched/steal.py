@@ -55,6 +55,21 @@ def rebalance(shards: ShardSet, max_items: int = 8) -> int:
                       min(max_items, (depths[hi] - depths[lo]) // 2))
 
 
+def claim_seat(seat, thief_rid: int) -> bool:
+    """Replica-level steal (DESIGN.md §9): claim a whole shard cycle-run by
+    CASing the :class:`~repro.sched.replica.ShardSeat` owner cell. One CAS,
+    no victim participation — ownership of the run (its backlog *and* all
+    its future cycles, since placement is ``seq % S``) moves atomically.
+    The victim discovers the loss lazily and republishes anything it had
+    staged from that shard; the seat cursor, not queue position, keeps the
+    thief's delivery in exact run order. Returns False when the CAS lost a
+    race (or the thief already owns the seat) — retry next step."""
+    owner = seat.owner.load()
+    if owner == thief_rid:
+        return False
+    return seat.owner.cas(owner, thief_rid)
+
+
 class ShardConsumer:
     """A consumer with a home shard that steals when the home runs dry.
 

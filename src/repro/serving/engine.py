@@ -20,6 +20,11 @@ The scheduler is vectorized: ``block_tables``/``seq_lens``/``last_tok`` live
 on device across steps (no numpy re-wrap per iteration), per-lane decode
 bookkeeping is array ops over the lane tables, page growth is one batched
 allocation per step, and prefill/decode share a single compiled callable.
+
+Scale-out is :class:`EngineReplicaGroup` (DESIGN.md §9): N of these engines
+over one fabric, each fed by a :class:`~repro.sched.SchedulerReplica` that
+owns a seat subset of every class, rebalanced purely by seat-claim steals,
+with exact-seat frontier checkpointing via :meth:`EngineReplicaGroup.sched_state`.
 """
 
 from __future__ import annotations
@@ -33,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.sched import Envelope, QueueClass, Scheduler
+from repro.sched import Envelope, QueueClass, ReplicaSet, Scheduler
 from repro.serving.kv_cache import PagedKVPool
 from repro.serving.paged_model import paged_forward
 
@@ -48,12 +53,29 @@ class Request:
     preemptions: int = 0
 
 
+def request_state(req: "Request") -> dict:
+    """JSON-able snapshot of a request for frontier checkpointing. Decoded
+    output is deliberately not captured: a restored request re-enters its
+    class at its original cycle seat and re-prefills — the same contract as
+    preemption."""
+    return {"uid": req.uid, "prompt": list(req.prompt),
+            "max_new_tokens": req.max_new_tokens, "qclass": req.qclass,
+            "preemptions": req.preemptions}
+
+
+def request_from_state(state: dict) -> "Request":
+    req = Request(state["uid"], list(state["prompt"]),
+                  state["max_new_tokens"], qclass=state["qclass"])
+    req.preemptions = state["preemptions"]
+    return req
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  page_size: int = 16, num_pages: int = 64, window: int = 4,
                  max_seq: int = 128,
                  classes: Optional[Sequence[QueueClass]] = None,
-                 policy="strict"):
+                 policy="strict", sched=None, forward_fn=None):
         assert all(k in ("dense", "moe") for k in cfg.block_pattern), \
             "paged engine serves attention-based families"
         self.cfg, self.params = cfg, params
@@ -65,10 +87,15 @@ class Engine:
         # (their masked decode writes land here, never on live pages).
         scratch, ok = self.pool.alloc(1)
         assert bool(ok.all()) and int(scratch[0]) == 0
-        if classes is None:
-            classes = [QueueClass("default", window=max(64, window),
-                                  reclaim_period=32)]
-        self.sched = Scheduler(classes, policy=policy)
+        if sched is None:
+            if classes is None:
+                classes = [QueueClass("default", window=max(64, window),
+                                      reclaim_period=32)]
+            sched = Scheduler(classes, policy=policy)
+        # Any Scheduler-shaped drain source works: the engine only ever
+        # calls drain/policy/classes/pending/submit — a SchedulerReplica
+        # (sched/replica.py) plugs in here to make this engine one of N.
+        self.sched = sched
         self.step_count = 0
         self._uid = itertools.count()
         # active request table (host side); lane tensors are device-resident
@@ -82,11 +109,17 @@ class Engine:
         self.seq_lens = jnp.zeros((max_batch,), jnp.int32)
         self.last_tok = jnp.zeros((max_batch,), jnp.int32)
         self.completed: Dict[int, Request] = {}
-        self.pending = 0  # accepted - admitted (emptiness check w/o dequeue)
         # Prefill and decode are the same function traced at different
-        # sequence lengths — one jit, one compilation cache.
-        self._forward = jax.jit(
+        # sequence lengths — one jit, one compilation cache. Replicas pass a
+        # shared callable so N engines share one compilation cache.
+        self._forward = forward_fn or jax.jit(
             lambda p, t, kp, vp, bt, sl: paged_forward(p, t, cfg, kp, vp, bt, sl))
+
+    @property
+    def pending(self) -> int:
+        """Accepted-but-not-laned items (incl. requeues), derived from the
+        scheduler's own counters — no engine-side bookkeeping to drift."""
+        return self.sched.pending()
 
     # ---------------------------------------------------------------- client
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -98,7 +131,6 @@ class Engine:
                       qclass=name)
         if self.sched.submit(name, req) is None:
             return None
-        self.pending += 1
         return req.uid
 
     def submit_many(self, prompts: List[List[int]], max_new_tokens: int = 16,
@@ -110,9 +142,7 @@ class Engine:
         reqs = [Request(next(self._uid), list(p), max_new_tokens, qclass=name)
                 for p in prompts]
         envs = self.sched.submit_many(name, reqs)
-        uids = [r.uid if e is not None else None for r, e in zip(reqs, envs)]
-        self.pending += sum(e is not None for e in envs)
-        return uids
+        return [r.uid if e is not None else None for r, e in zip(reqs, envs)]
 
     # ---------------------------------------------------------------- pages
     def _alloc_pages(self, n: int) -> Optional[np.ndarray]:
@@ -153,7 +183,6 @@ class Engine:
         req.output = []
         self._retire_request(lane)
         qc.requeue(env)
-        self.pending += 1
 
     def _preempt_for(self, prio: int, stamp: int) -> bool:
         """Free pages for a claimant entitled as (class priority, arrival
@@ -207,7 +236,6 @@ class Engine:
                         qc2.requeue(env2)
                     return
                 pages = self._alloc_pages(max(1, need))
-            self.pending -= 1
             self.active[lane] = req
             self._lane_env[lane] = (qc, env)
             self.block_tables = self.block_tables.at[lane, :len(pages)].set(
@@ -314,3 +342,160 @@ class Engine:
         """Per-class fabric snapshot (occupancy, admission latency, rejects)
         — reads existing domain counters only."""
         return self.sched.snapshot()
+
+
+def _split_budget(total: int, parts: int) -> List[int]:
+    """Partition an integer budget as evenly as possible, every part >= 1."""
+    assert total >= parts, f"budget {total} cannot cover {parts} replicas"
+    base, rem = divmod(total, parts)
+    return [base + (1 if i < rem else 0) for i in range(parts)]
+
+
+class EngineReplicaGroup:
+    """N engine replicas over one class fabric (DESIGN.md §9).
+
+    Each replica is a full :class:`Engine` — its own lanes, its own page
+    pool (the lane and page budgets are partitioned, not shared), its own
+    policy drain — fed by a :class:`~repro.sched.SchedulerReplica` that
+    owns a seat subset of every class. Replicas share the model params and
+    one compiled forward (same shapes -> one jit cache). Rebalancing is
+    pure stealing: a starved replica claims a whole cycle-run seat with one
+    CAS; no replica ever blocks on another.
+
+    The group is also the checkpoint boundary: :meth:`sched_state` is an
+    exact-seat frontier snapshot taken between steps (active lanes are
+    recorded at their original seats, like preemption victims), and
+    :meth:`from_sched_state` restores a group in which every tenant resumes
+    at its exact FIFO seat.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, num_replicas: int = 2,
+                 max_batch: int = 4, page_size: int = 16, num_pages: int = 64,
+                 window: int = 4, max_seq: int = 128,
+                 classes: Optional[Sequence[QueueClass]] = None,
+                 policy="strict", min_steal: int = 1,
+                 replica_set: Optional[ReplicaSet] = None,
+                 forward_fn=None, uid_start: int = 0):
+        if replica_set is None:
+            if classes is None:
+                classes = [QueueClass("default", num_shards=num_replicas,
+                                      window=max(64, window),
+                                      reclaim_period=32)]
+            replica_set = ReplicaSet(Scheduler(classes, policy=policy),
+                                     num_replicas, policy=policy,
+                                     min_steal=min_steal)
+        self.replica_set = replica_set
+        self.sched = replica_set.scheduler
+        self.num_replicas = replica_set.num_replicas
+        self._fwd = forward_fn or jax.jit(
+            lambda p, t, kp, vp, bt, sl: paged_forward(p, t, cfg, kp, vp, bt, sl))
+        lanes = _split_budget(max_batch, self.num_replicas)
+        pages = _split_budget(num_pages, self.num_replicas)
+        self.engines = [
+            Engine(cfg, params, max_batch=lanes[r], page_size=page_size,
+                   num_pages=pages[r], window=window, max_seq=max_seq,
+                   sched=self.replica_set.replicas[r], forward_fn=self._fwd)
+            for r in range(self.num_replicas)]
+        self._next_uid = int(uid_start)
+        self.step_count = 0
+
+    # ---------------------------------------------------------------- client
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               qclass: Optional[str] = None) -> Optional[int]:
+        name = qclass or self.sched.default_class
+        req = Request(self._next_uid, list(prompt), max_new_tokens,
+                      qclass=name)
+        if self.sched.submit(name, req) is None:
+            return None
+        self._next_uid += 1
+        return req.uid
+
+    def submit_many(self, prompts: List[List[int]], max_new_tokens: int = 16,
+                    qclass: Optional[str] = None) -> List[Optional[int]]:
+        name = qclass or self.sched.default_class
+        reqs = []
+        for p in prompts:
+            reqs.append(Request(self._next_uid + len(reqs), list(p),
+                                max_new_tokens, qclass=name))
+        envs = self.sched.submit_many(name, reqs)
+        self._next_uid += len(reqs)
+        return [r.uid if e is not None else None for r, e in zip(reqs, envs)]
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> List[Request]:
+        """One group iteration: every replica runs its own admit/decode
+        step, then one steal pass rebalances starved replicas."""
+        self.step_count += 1
+        done: List[Request] = []
+        for eng in self.engines:
+            done.extend(eng.step())
+        self.replica_set.rebalance()
+        return done
+
+    def idle(self) -> bool:
+        return (self.replica_set.pending() == 0
+                and all(r is None for eng in self.engines
+                        for r in eng.active))
+
+    def run_until_idle(self, max_steps: int = 1000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            self.step()
+            if self.idle():
+                break
+        return self.completed
+
+    @property
+    def completed(self) -> Dict[int, Request]:
+        out: Dict[int, Request] = {}
+        for eng in self.engines:
+            out.update(eng.completed)
+        return out
+
+    # ------------------------------------------------------------ checkpoint
+    def sched_state(self) -> dict:
+        """Exact-seat frontier snapshot of the serving fabric, taken
+        between steps. Undrained seats are captured in place; requests
+        currently *on a lane* are recorded at their original seats as
+        requeue entries (their KV pages are not checkpointed — on restore
+        they re-prefill, the preemption contract). The dict is plain JSON
+        data: hand it to the async checkpointer's aux channel."""
+        st = self.replica_set.state(encode=request_state)
+        for eng in self.engines:
+            for lane_env in eng._lane_env:
+                if lane_env is None:
+                    continue
+                qc, env = lane_env
+                st["classes"][qc.name]["requeue"].append(
+                    [env.seq, env.stamp, request_state(env.payload)])
+        for cs in st["classes"].values():
+            cs["requeue"].sort(key=lambda rec: rec[0])
+        st["next_uid"] = self._next_uid
+        return st
+
+    @classmethod
+    def from_sched_state(cls, cfg: ModelConfig, params, state: dict, *,
+                         policy="strict", min_steal: int = 1,
+                         forward_fn=None, window: int = 4, **engine_kw
+                         ) -> "EngineReplicaGroup":
+        """Restore a replica group from :meth:`sched_state`: every tenant
+        resumes at its exact FIFO seat (in-flight requests re-prefill).
+        Each class's shard CMPQueue configuration is restored from the
+        snapshot itself; ``window`` here is only the KV pools' protection
+        window."""
+        rs = ReplicaSet.from_state(
+            state, decode=request_from_state, policy=policy,
+            min_steal=min_steal)
+        return cls(cfg, params, replica_set=rs, forward_fn=forward_fn,
+                   window=window, uid_start=state.get("next_uid", 0),
+                   **engine_kw)
+
+    # ------------------------------------------------------------ telemetry
+    def class_stats(self) -> dict:
+        """Fabric-wide per-class roll-up, same ``{name: snap}`` shape as
+        :meth:`Engine.class_stats` — consumers never branch on replica
+        count. Per-replica detail lives in :meth:`replica_stats`."""
+        return self.replica_set.snapshot()["classes"]
+
+    def replica_stats(self) -> dict:
+        """Per-replica steal/idle/pending detail (domain counters only)."""
+        return self.replica_set.snapshot()["replicas"]

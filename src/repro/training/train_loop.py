@@ -42,7 +42,6 @@ def make_train_step(cfg: ModelConfig, opt_cfg: O.OptConfig,
         kw["donate_argnums"] = (0, 1)
     if mesh is not None:
         from repro.parallel import sharding as S
-        from jax.sharding import NamedSharding
 
         def shard_params(p):
             return S.param_shardings(p, mesh)

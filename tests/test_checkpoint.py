@@ -2,7 +2,6 @@
 failure-recovery resume equivalence."""
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +86,47 @@ def test_failure_recovery_resume_is_exact(tmp_path):
                     jax.tree_util.tree_leaves(trC.params)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_aux_frontier_rides_the_checkpoint(tmp_path):
+    """The aux (frontier) side-channel saves atomically with its step and
+    restores as plain JSON — scheduler seats + pipeline cursors resume."""
+    state = {"w": jnp.ones((4, 4))}
+    aux = {"sched": {"classes": {"a": {"seq": 7, "frontier": 3}}},
+           "pipeline": {"cursors": [4, 5], "seed": 0}}
+    C.save(str(tmp_path), 2, state, aux=aux)
+    step, got = C.restore_aux(str(tmp_path))
+    assert step == 2 and got == aux
+    # a step saved without aux reports None (not an error)
+    C.save(str(tmp_path), 3, state)
+    step, got = C.restore_aux(str(tmp_path))
+    assert step == 3 and got is None
+
+
+def test_async_checkpointer_aux_snapshot_is_decoupled(tmp_path):
+    """AsyncCheckpointer deep-copies aux at submit: the caller mutating its
+    live scheduler state afterwards cannot tear the written snapshot."""
+    ck = C.AsyncCheckpointer(str(tmp_path), window=2)
+    aux = {"frontier": [1, 2, 3]}
+    assert ck.submit(1, {"w": jnp.zeros((8,))}, aux=aux)
+    aux["frontier"].append(999)  # live state moves on
+    ck.drain()
+    ck.close()
+    step, got = C.restore_aux(str(tmp_path), 1)
+    assert got == {"frontier": [1, 2, 3]}
+
+
+def test_async_checkpointer_bad_aux_does_not_leak_window_slot(tmp_path):
+    """A non-JSON-able aux raises at submit — and must not burn a window
+    reservation, or checkpointing would silently die after W failures."""
+    ck = C.AsyncCheckpointer(str(tmp_path), window=1)
+    for _ in range(3):  # more failures than the window holds
+        with pytest.raises(TypeError):
+            ck.submit(1, {"w": jnp.zeros((4,))}, aux={"bad": object()})
+    assert ck.submit(2, {"w": jnp.zeros((4,))}, aux={"ok": [1, 2]})
+    ck.drain()
+    ck.close()
+    assert C.restore_aux(str(tmp_path), 2)[1] == {"ok": [1, 2]}
 
 
 def test_elastic_remesh_restore(tmp_path):

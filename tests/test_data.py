@@ -38,6 +38,24 @@ def test_pipeline_delivers_and_resumes():
             "resumed pipeline re-delivered far-past batches")
 
 
+def test_from_state_dedupes_num_producers_kwarg():
+    """Callers that also pass num_producers explicitly must not collide with
+    the checkpoint's cursor vector: matching values dedupe, a mismatch is a
+    loud config error (resharding would remap every batch_id)."""
+    state = {"cursors": [4, 5], "seed": 7}
+    pipe = DataPipeline.from_state(state, batch=1, seq=8, vocab=50,
+                                   num_producers=2, window=8)
+    assert pipe.num_producers == 2
+    assert pipe.state() == state  # round-trip invariant
+    pipe.close()
+    try:
+        DataPipeline.from_state(state, batch=1, seq=8, vocab=50,
+                                num_producers=3, window=8)
+        assert False, "mismatched num_producers must raise"
+    except ValueError as e:
+        assert "cursors" in str(e)
+
+
 def test_stalled_producer_does_not_block_consumer():
     pipe = DataPipeline(batch=2, seq=8, vocab=100, num_producers=2, window=8)
     pipe.start()

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests (reduced configs, CPU) + full-config param
 counts via eval_shape (no allocation) + decode/prefill consistency."""
 
-import dataclasses
 import math
 
 import jax

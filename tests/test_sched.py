@@ -1,15 +1,18 @@
-"""Scheduler fabric (DESIGN.md §8): per-class strict FIFO (under concurrent
-producers AND stealers), window-based admission, drain policies, work
-stealing, zero-atomic telemetry."""
+"""Scheduler fabric (DESIGN.md §8-9): per-class strict FIFO (under
+concurrent producers AND stealers), window-based admission, drain policies,
+work stealing, zero-atomic telemetry, sharded scheduler replicas with
+seat-steal rebalancing and exact-seat frontier checkpointing."""
 
+import json
 import threading
 import time
 
 import pytest
 
-from repro.sched import (ClassFifo, QueueClass, Scheduler, ShardConsumer,
-                         ShardSet, StrictPriority, WeightedFair, make_policy,
-                         queue_depth, rebalance, steal_into)
+from repro.sched import (ClassFifo, QueueClass, ReplicaSet, Scheduler,
+                         ShardConsumer, ShardSet, StrictPriority,
+                         WeightedFair, make_policy, queue_depth, rebalance,
+                         steal_into)
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +242,223 @@ def test_rebalance_reduces_imbalance():
     depths = shards.depths()
     assert max(depths) - min(depths) < 60
     assert sum(depths) == 60  # migration conserves items
+
+
+# ---------------------------------------------------------------------------
+# scheduler replicas (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def _three_class_replicas(num_replicas, *, num_shards=4, per_class=120,
+                          min_steal=1):
+    classes = [QueueClass(n, priority=p, weight=w, num_shards=num_shards,
+                          window=4096)
+               for n, p, w in (("hi", 2, 4.0), ("mid", 1, 2.0),
+                               ("lo", 0, 1.0))]
+    sched = Scheduler(classes, policy="strict")
+    rs = ReplicaSet(sched, num_replicas, min_steal=min_steal)
+    for i in range(per_class):
+        for n in ("hi", "mid", "lo"):
+            sched.submit(n, (n, i))
+    return rs
+
+
+def _drain_all(rs, *, k=8, steal=False, collect=None, max_rounds=10000):
+    """Round-robin every replica until the fabric is empty; returns
+    per-(class, replica) seq streams."""
+    streams = collect if collect is not None else {}
+    rounds = 0
+    while rs.pending() > 0:
+        rounds += 1
+        assert rounds < max_rounds, "fabric did not drain"
+        for r in rs.replicas:
+            for v, env in r.drain(k):
+                streams.setdefault((v.name, r.rid), []).append(env.seq)
+            if steal:
+                r.steal_if_starved()
+    return streams
+
+
+def test_replica_partition_delivers_exact_class_cycle_order():
+    """ISSUE acceptance: with 4 replicas each owning a seat subset, every
+    class's replica streams are seat-monotone and merge (by seat) to exactly
+    0,1,2,... — nothing lost, duplicated, or reordered within a run."""
+    rs = _three_class_replicas(4, per_class=120)
+    streams = _drain_all(rs)
+    for name in ("hi", "mid", "lo"):
+        merged = sorted(s for (n, rid), ss in streams.items()
+                        for s in ss if n == name)
+        assert merged == list(range(120)), f"{name}: inexact merge"
+        for rid in range(4):
+            mine = streams.get((name, rid), [])
+            assert mine == sorted(mine), \
+                f"{name}@r{rid}: stream not seat-monotone"
+
+
+def test_replica_policies_act_per_replica():
+    """Each replica runs its own policy over its own seats: a strict drain
+    still empties the highest class first, per replica."""
+    rs = _three_class_replicas(2, per_class=40)
+    for r in rs.replicas:
+        first = r.drain(10)
+        assert all(v.name == "hi" for v, _ in first)
+
+
+def test_replica_steal_is_one_cas_and_keeps_run_order():
+    """A starved replica claims whole cycle-runs from stalled peers (one
+    owner-CAS per run). Per-run delivery order survives stealing; the merge
+    stays exact."""
+    rs = _three_class_replicas(4, per_class=100, min_steal=1)
+    r0 = rs.replicas[0]
+    out = []
+    rounds = 0
+    while len(out) < 300:  # replicas 1-3 stalled: r0 must steal everything
+        rounds += 1
+        assert rounds < 50000
+        got = r0.drain(8)
+        if not got:
+            r0.steal_if_starved()
+            continue
+        out.extend((v.name, env.seq) for v, env in got)
+    assert r0.steals > 0
+    for name in ("hi", "mid", "lo"):
+        seqs = [s for n, s in out if n == name]
+        assert sorted(seqs) == list(range(100))
+        for shard in range(4):  # within every stolen run: exact order
+            run = [s for s in seqs if s % 4 == shard]
+            assert run == sorted(run)
+    # all seats ended under the only live replica
+    assert all(seat.owner.load() == 0
+               for seats in rs.seats.values() for seat in seats)
+
+
+def test_replica_concurrent_drains_no_loss_no_dup():
+    """4 replica threads draining + stealing concurrently: the claim CAS and
+    seat-cursor arithmetic keep every class's delivery exactly-once."""
+    rs = _three_class_replicas(4, per_class=200, min_steal=2)
+    lock = threading.Lock()
+    got = {n: [] for n in ("hi", "mid", "lo")}
+    total = [0]
+    done = threading.Event()
+
+    def work(rid):
+        r = rs.replicas[rid]
+        while not done.is_set():
+            batch = r.drain(8)
+            if not batch:
+                r.steal_if_starved()
+                time.sleep(0)
+                continue
+            with lock:
+                for v, env in batch:
+                    got[v.name].append(env.seq)
+                total[0] += len(batch)
+                if total[0] >= 600:
+                    done.set()
+
+    ts = [threading.Thread(target=work, args=(rid,)) for rid in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    assert total[0] == 600
+    for name, seqs in got.items():
+        assert sorted(seqs) == list(range(200)), f"{name}: lost/dup"
+
+
+def test_queueclass_state_roundtrip_resumes_exact_seat():
+    """Single-drain checkpointing: drain part of a class, snapshot
+    (including a preempted seat), restore through JSON, and the remaining
+    delivery is byte-identical to an uninterrupted run."""
+    def build():
+        qc = QueueClass("t", num_shards=3, admit_window=256, window=512)
+        for i in range(60):
+            qc.submit(i)
+        head = qc.drain(10)
+        qc.requeue(head[7])  # a preempted seat rides the checkpoint
+        return qc
+
+    uninterrupted = build()
+    expected = [e.payload for e in uninterrupted.drain(100)]
+
+    qc = build()
+    state = json.loads(json.dumps(qc.state()))
+    assert state["seq"] == 60 and state["frontier"] == 10
+    assert state["gaps"] == 0 and len(state["requeue"]) == 1
+    restored = QueueClass.from_state(state, window=512)
+    assert [e.payload for e in restored.drain(100)] == expected
+    assert restored.pending() == 0
+    # admission window occupancy survived: seats freed by the pre-ckpt drain
+    # are available again, the rest still count
+    assert restored.submit(99) is not None
+
+
+def test_replica_kill_and_restore_chaos():
+    """ISSUE satellite: run a 3-class wave on 4 replicas, checkpoint
+    mid-wave, kill a replica (its staged claims die with it), restore the
+    fabric from the snapshot, and finish: per-tenant delivery is identical
+    to an uninterrupted run — every tenant resumed at its exact FIFO seat."""
+    per_class = 90
+
+    def run(interrupt):
+        rs = _three_class_replicas(4, per_class=per_class)
+        streams = {}
+        for _ in range(4):  # partial wave, all replicas delivering
+            for r in rs.replicas:
+                for v, env in r.drain(3):
+                    streams.setdefault((v.name, r.rid), []).append(env.seq)
+        if interrupt:
+            state = json.loads(json.dumps(rs.state()))
+            # kill: drop the whole live fabric (replica 2 "crashes" holding
+            # whatever it had staged; the snapshot is the recovery truth)
+            del rs
+            rs = ReplicaSet.from_state(state, window=4096)
+        _drain_all(rs, k=3, collect=streams)
+        return streams
+
+    base = run(interrupt=False)
+    recovered = run(interrupt=True)
+    for name in ("hi", "mid", "lo"):
+        for rid in range(4):
+            assert base.get((name, rid)) == recovered.get((name, rid)), \
+                f"{name}@r{rid}: delivery diverged across kill+restore"
+        merged = sorted(s for (n, rid), ss in recovered.items()
+                        for s in ss if n == name)
+        assert merged == list(range(per_class))
+
+
+def test_replica_checkpoint_captures_policy_held_heads():
+    """A fifo-merge policy buffers one head per class between drains; its
+    seat cursor has already advanced, so the checkpoint must record it (as
+    a requeued seat) or the tenant would vanish across a restore."""
+    classes = [QueueClass(n, num_shards=2, window=256) for n in ("a", "b")]
+    sched = Scheduler(classes, policy="fifo")
+    rs = ReplicaSet(sched, 2, policy="fifo")
+    for i in range(10):
+        sched.submit("a", ("a", i))
+        sched.submit("b", ("b", i))
+    # k=1 drains force ClassFifo to hold the other class's head
+    delivered = []
+    for r in rs.replicas:
+        delivered += [(v.name, e.seq) for v, e in r.drain(1)]
+    assert sum(r.policy.held() for r in rs.replicas) > 0
+    state = json.loads(json.dumps(rs.state()))
+    rs2 = ReplicaSet.from_state(state, policy="fifo", window=256)
+    rounds = 0
+    while rs2.pending() > 0 and rounds < 1000:
+        rounds += 1
+        for r in rs2.replicas:
+            delivered += [(v.name, e.seq) for v, e in r.drain(4)]
+    for name in ("a", "b"):
+        seqs = sorted(s for n, s in delivered if n == name)
+        assert seqs == list(range(10)), \
+            f"{name}: policy-held head lost across checkpoint"
+
+
+def test_replica_set_rejects_too_few_shards():
+    sched = Scheduler([QueueClass("a", num_shards=2)])
+    with pytest.raises(AssertionError):
+        ReplicaSet(sched, 4)
 
 
 # ---------------------------------------------------------------------------
