@@ -51,10 +51,20 @@ def check(baseline: dict, currents: list, tolerance: float) -> int:
     for key, direction, tol_mult in GATES:
         try:
             base = lookup(baseline, key)
+        except KeyError:
+            # A gate added before its baseline lands (or a trajectory file
+            # from an older PR): nothing to compare against, so skip loudly
+            # instead of failing — the gate arms itself the first time the
+            # committed BENCH_queue.json carries the metric.
+            print(f"{key:38s} skipped (absent from baseline)")
+            continue
+        try:
             vals = [lookup(c, key) for c in currents]
             cur = max(vals) if direction == "lower" else min(vals)
         except KeyError as e:
-            print(f"{key:38s} MISSING key {e} -> fail")
+            # Present in the baseline but gone from the fresh snapshot:
+            # that is a coverage regression, not noise — fail.
+            print(f"{key:38s} MISSING from current snapshot ({e}) -> fail")
             failures += 1
             continue
         tol = tolerance * tol_mult

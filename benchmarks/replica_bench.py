@@ -1,6 +1,11 @@
-"""Replica-fabric benchmarks (DESIGN.md §9): drain scaling of N scheduler
-replicas with seat stealing, straggler tolerance, and the exact-seat
-frontier checkpoint round trip (capture / restore latency).
+"""Replica-fabric benchmarks (DESIGN.md §9-10): drain scaling of N
+scheduler replicas with seat stealing, straggler tolerance, the exact-seat
+frontier checkpoint round trip (capture / restore latency), and live
+resize under load.
+
+The system under test is declared through one scheduler-only
+:class:`FabricConfig` and driven through the :class:`Fabric` session
+handle — the same construction path as serve.py and the examples.
 
 Sized for the 1-core container: per-batch service time is simulated with a
 sleep (which releases the GIL, so replica overlap is real even here), and
@@ -15,28 +20,24 @@ import threading
 import time
 from typing import Dict, List
 
-from repro.sched import QueueClass, ReplicaSet, Scheduler
+from repro.fabric import Fabric, FabricConfig, tiered_classes
 
 
 def _make_fabric(num_replicas: int, *, num_shards: int = 4,
-                 policy: str = "strict", min_steal: int = 1) -> ReplicaSet:
-    classes = [
-        QueueClass("interactive", priority=2, weight=8.0,
-                   num_shards=num_shards, window=8192),
-        QueueClass("batch", priority=1, weight=3.0, num_shards=num_shards,
-                   window=8192),
-        QueueClass("background", priority=0, weight=1.0,
-                   num_shards=num_shards, window=8192),
-    ]
-    sched = Scheduler(classes, policy=policy)
-    return ReplicaSet(sched, num_replicas, policy=policy, min_steal=min_steal)
+                 policy: str = "strict", min_steal: int = 1,
+                 max_replicas: int = None, drain_k: int = 8) -> Fabric:
+    return Fabric.open(FabricConfig(
+        classes=tiered_classes(), replicas=num_replicas,
+        max_replicas=max(num_replicas, max_replicas or 0),
+        shards_per_class=num_shards, policy=policy, queue_window=8192,
+        min_steal=min_steal, drain_k=drain_k))
 
 
-def _submit_wave(rs: ReplicaSet, items: int) -> Dict[str, int]:
+def _submit_wave(fab: Fabric, items: int) -> Dict[str, int]:
     per_class = {"interactive": items // 4, "batch": items // 4,
                  "background": items - 2 * (items // 4)}
     for name, n in per_class.items():
-        rs.submit_many(name, [(name, i) for i in range(n)])
+        fab.submit_many([(name, i) for i in range(n)], qclass=name)
     return per_class
 
 
@@ -52,9 +53,9 @@ def replica_scaling(num_replicas: int, *, items: int = 2400,
     throughput, idle fraction, steal volume, and verifies exactness: per
     class, the union of replica streams is exactly 0..n-1 and every
     cycle-run is delivered in order."""
-    rs = _make_fabric(num_replicas, num_shards=num_shards,
-                      min_steal=max(1, drain_k // 4))
-    per_class = _submit_wave(rs, items)
+    fab = _make_fabric(num_replicas, num_shards=num_shards,
+                       min_steal=max(1, drain_k // 4))
+    per_class = _submit_wave(fab, items)
     total = sum(per_class.values())
 
     streams: List[List] = [[] for _ in range(num_replicas)]
@@ -65,7 +66,7 @@ def replica_scaling(num_replicas: int, *, items: int = 2400,
     lock = threading.Lock()
 
     def work(rid: int):
-        r = rs.replicas[rid]
+        r = fab.replicas[rid]
         if rid == 0 and straggle_s > 0:
             time.sleep(straggle_s)
         while not done.is_set():
@@ -120,8 +121,8 @@ def replica_scaling(num_replicas: int, *, items: int = 2400,
         "items_per_sec": total / max(wall, 1e-9),
         "idle_frac": sum(idle_time) / max(num_replicas * wall, 1e-9),
         "dark_tail_frac": dark / max(num_replicas * wall, 1e-9),
-        "steals": sum(r.steals for r in rs.replicas),
-        "stolen_cycles": sum(r.stolen_cycles for r in rs.replicas),
+        "steals": sum(r.steals for r in fab.replicas),
+        "stolen_cycles": sum(r.stolen_cycles for r in fab.replicas),
         "exact_order": True,
     }
 
@@ -130,35 +131,36 @@ def recovery_roundtrip(*, items: int = 6000, num_shards: int = 8,
                        num_replicas: int = 4, drain_frac: float = 0.4,
                        drain_k: int = 16) -> Dict:
     """The checkpoint round trip, timed: drain part of a wave, capture the
-    exact-seat frontier snapshot (`ReplicaSet.state`), rebuild a fresh
-    fabric from its JSON encoding (`from_state`), drain the rest, and
-    verify every class resumed at its exact seat."""
-    rs = _make_fabric(num_replicas, num_shards=num_shards)
-    per_class = _submit_wave(rs, items)
+    exact-seat frontier snapshot (`Fabric.snapshot`), rebuild a fresh
+    session from its JSON encoding (`Fabric.from_snapshot` — the config
+    rides inside the snapshot), drain the rest, and verify every class
+    resumed at its exact seat."""
+    fab = _make_fabric(num_replicas, num_shards=num_shards)
+    per_class = _submit_wave(fab, items)
     total = sum(per_class.values())
 
     seen: Dict[str, List[int]] = {n: [] for n in per_class}
     target = int(total * drain_frac)
     got_n = 0
     while got_n < target:
-        for r in rs.replicas:
+        for r in fab.replicas:
             for v, env in r.drain(drain_k):
                 seen[v.name].append(env.seq)
                 got_n += 1
 
     t0 = time.perf_counter()
-    state = rs.state()
+    state = fab.snapshot()
     capture_s = time.perf_counter() - t0
     blob = json.dumps(state)
 
     t0 = time.perf_counter()
-    rs2 = ReplicaSet.from_state(json.loads(blob), window=8192)
+    fab2 = Fabric.from_snapshot(json.loads(blob))
     restore_s = time.perf_counter() - t0
 
     stall = 0
-    while rs2.pending() > 0 and stall < 10000:
+    while fab2.pending() > 0 and stall < 10000:
         got_round = 0
-        for r in rs2.replicas:
+        for r in fab2.replicas:
             for v, env in r.drain(drain_k):
                 seen[v.name].append(env.seq)
                 got_round += 1
@@ -173,4 +175,58 @@ def recovery_roundtrip(*, items: int = 6000, num_shards: int = 8,
         "restore_ms": restore_s * 1e3,
         "snapshot_bytes": len(blob),
         "resume_exact": exact,
+    }
+
+
+def live_resize(*, items: int = 2400, num_shards: int = 4,
+                drain_k: int = 8, grow_to: int = 4, shrink_to: int = 2
+                ) -> Dict:
+    """Live elasticity, timed: a 1-replica fabric drains part of a wave,
+    `resize`s up to ``grow_to`` under load (a batch of seat claims — no
+    drain pause, producers untouched), drains more, shrinks to
+    ``shrink_to``, and finishes. Verifies the tentpole claim: per class the
+    union of deliveries is exactly 0..n-1 and every shard cycle-run stays
+    in order across both resizes."""
+    fab = _make_fabric(1, num_shards=num_shards, max_replicas=grow_to,
+                       drain_k=drain_k)
+    per_class = _submit_wave(fab, items)
+    total = sum(per_class.values())
+
+    streams: Dict[str, List[int]] = {n: [] for n in per_class}
+    delivered = 0
+
+    def drain_round() -> int:
+        got = 0
+        for v, env in fab.step():
+            streams[v.name].append(env.seq)
+            got += 1
+        return got
+
+    resize_ms = {}
+    phases = ((total // 3, grow_to), (2 * total // 3, shrink_to))
+    phase = 0
+    stall = 0
+    while delivered < total and stall < 10000:
+        if phase < len(phases) and delivered >= phases[phase][0]:
+            n = phases[phase][1]
+            t0 = time.perf_counter()
+            fab.resize(n)
+            resize_ms[f"to_{n}"] = (time.perf_counter() - t0) * 1e3
+            phase += 1
+        got = drain_round()
+        delivered += got
+        stall = 0 if got else stall + 1
+
+    exact = True
+    for name, n in per_class.items():
+        exact &= sorted(streams[name]) == list(range(n))
+        for s in range(num_shards):
+            run = [q for q in streams[name] if q % num_shards == s]
+            exact &= run == sorted(run)
+    return {
+        "items": total,
+        "resizes": f"1->{grow_to}->{shrink_to}",
+        "resize_ms": resize_ms,
+        "exact_order": exact,
+        "resize_count": fab.replica_set.resizes,
     }

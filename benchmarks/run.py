@@ -266,13 +266,17 @@ def bench_sched(full: bool, out_path: str = "BENCH_queue.json") -> None:
 
 
 def bench_replica(full: bool, out_path: str = "BENCH_queue.json") -> None:
-    """Replica fabric (DESIGN.md §9): drain scaling at N=1/2/4 replicas,
-    straggler tolerance with seat stealing on vs off, and the exact-seat
-    checkpoint round trip. Merges into BENCH_queue.json under "replica"."""
-    from benchmarks.replica_bench import recovery_roundtrip, replica_scaling
+    """Replica fabric (DESIGN.md §9-10): drain scaling at N=1/2/4 replicas,
+    straggler tolerance with seat stealing on vs off, the exact-seat
+    checkpoint round trip, and live resize under load — all constructed
+    through FabricConfig/Fabric. Merges into BENCH_queue.json under
+    "replica"."""
+    from benchmarks.replica_bench import (live_resize, recovery_roundtrip,
+                                          replica_scaling)
 
     items = 4800 if full else 2400
-    result = {"scaling": {}, "straggler": {}, "recovery": {}}
+    result = {"scaling": {}, "straggler": {}, "recovery": {},
+              "elasticity": {}}
     for n in (1, 2, 4):
         r = replica_scaling(n, items=items)
         result["scaling"][str(n)] = r
@@ -294,6 +298,11 @@ def bench_replica(full: bool, out_path: str = "BENCH_queue.json") -> None:
           f"snapshot_bytes={rec['snapshot_bytes']}")
     _emit("replica/recovery/restore", rec["restore_ms"] * 1e3,
           f"resume_exact={rec['resume_exact']}")
+    ela = live_resize(items=items)
+    result["elasticity"] = ela
+    _emit("replica/elasticity/resize", sum(ela["resize_ms"].values()) * 1e3,
+          f"resizes={ela['resizes']},exact_order={ela['exact_order']},"
+          + ",".join(f"{k}_ms={v:.2f}" for k, v in ela["resize_ms"].items()))
 
     # Persist first (a flaky sanity check must not discard the run's data).
     _merge_bench_json(out_path, {"replica": result})
@@ -311,6 +320,7 @@ def bench_replica(full: bool, out_path: str = "BENCH_queue.json") -> None:
     assert on["dark_tail_frac"] < off["dark_tail_frac"], \
         "seat stealing did not bound the straggler's dark tail"
     assert rec["resume_exact"], "checkpoint resume lost or reordered seats"
+    assert ela["exact_order"], "live resize lost or reordered seats"
 
 
 def bench_quick(out_path: str = "BENCH_queue.json") -> None:

@@ -12,7 +12,8 @@ import threading
 import time
 from typing import Dict, List
 
-from repro.sched import QueueClass, Scheduler, ShardConsumer, ShardSet
+from repro.fabric import Fabric, FabricConfig, tiered_classes
+from repro.sched import ShardConsumer, ShardSet
 
 
 def _pctl(xs: List[float], p: float) -> float:
@@ -25,26 +26,23 @@ def mixed_workload_latency(policy: str, *, waves: int = 30,
                            drain_k: int = 8, service_s: float = 0.001
                            ) -> Dict:
     """3-class mixed workload under *sustained* arrival: every wave submits a
-    burst per class, then the scheduler drains one admission batch and pays
+    burst per class, then the fabric drains one admission batch and pays
     ``service_s`` of simulated engine-step service; leftover backlog drains
     after the arrival phase. Admission latency is measured per item from
     submit to policy delivery — the quantity the policies trade off across
     classes (interactive arrivals exactly fill drain_k, so strict priority
     starves the lower classes while arrivals last; weighted-fair gives every
-    class its share throughout)."""
+    class its share throughout). The whole system is declared through one
+    scheduler-only FabricConfig."""
     per_wave = per_wave or {"interactive": 8, "batch": 12, "background": 12}
-    classes = [
-        QueueClass("interactive", priority=2, weight=8.0, num_shards=2,
-                   window=4096),
-        QueueClass("batch", priority=1, weight=3.0, num_shards=2, window=4096),
-        QueueClass("background", priority=0, weight=1.0, num_shards=2,
-                   window=4096),
-    ]
-    sched = Scheduler(classes, policy=policy)
+    fab = Fabric.open(FabricConfig(
+        classes=tiered_classes(interactive_slo_ms=5.0, batch_slo_ms=100.0),
+        shards_per_class=2, policy=policy, queue_window=4096,
+        drain_k=drain_k))
     lat: Dict[str, List[float]] = {n: [] for n in per_wave}
 
     def drain_once() -> int:
-        batch = sched.drain(drain_k)
+        batch = fab.step()
         now = time.monotonic()
         for qc, env in batch:
             lat[qc.name].append((now - env.t_submit) * 1e3)
@@ -55,14 +53,15 @@ def mixed_workload_latency(policy: str, *, waves: int = 30,
     t0 = time.perf_counter()
     for w in range(waves):
         for name, n in per_wave.items():
-            sched.submit_many(name, [(name, w, j) for j in range(n)])
+            fab.submit_many([(name, w, j) for j in range(n)], qclass=name)
         drain_once()
     while drain_once() > 0:  # drain the accumulated backlog
         pass
     wall = time.perf_counter() - t0
 
     out = {"policy": policy, "waves": waves, "drain_k": drain_k,
-           "service_ms": service_s * 1e3, "wall_s": wall, "classes": {}}
+           "service_ms": service_s * 1e3, "wall_s": wall, "classes": {},
+           "slo": fab.stats()["slo"]}
     for name, xs in lat.items():
         out["classes"][name] = {
             "n": len(xs),

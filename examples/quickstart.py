@@ -1,4 +1,5 @@
-"""Quickstart: train a tiny LM through the full CMP stack in ~a minute.
+"""Quickstart: the whole CMP serving stack — class queues, scheduler
+replicas, paged-KV engine — from one declarative config, in ~15 lines.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,27 +8,21 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.configs import get_config                      # noqa: E402
-from repro.data.pipeline import DataPipeline              # noqa: E402
-from repro.models import param_count                      # noqa: E402
-from repro.training.optimizer import OptConfig            # noqa: E402
-from repro.training.train_loop import Trainer             # noqa: E402
+from repro.fabric import ClassSpec, Fabric, FabricConfig  # noqa: E402
 
 
 def main():
-    cfg = get_config("yi-6b", smoke=True)  # reduced same-family config
-    opt = OptConfig(lr=2e-3, warmup_steps=5, total_steps=60)
-    # Producer threads feed the strict-FIFO CMP queue; the protection window
-    # bounds pipeline memory and absorbs stalls (the paper's contribution,
-    # working as the input layer).
-    pipe = DataPipeline(batch=8, seq=64, vocab=cfg.vocab_size,
-                        num_producers=2, window=32)
-    tr = Trainer(cfg, opt)
-    print(f"model: {cfg.name} ({param_count(tr.params):,} params)")
-    tr.fit(iter(pipe), 60, data_pipe=pipe)
-    pipe.close()
-    print(f"loss: {tr.history[0]:.3f} -> {tr.history[-1]:.3f} over 60 steps")
-    assert tr.history[-1] < tr.history[0]
+    config = FabricConfig(classes=(ClassSpec("chat", slo_ms=60000.0),),
+                          arch="glm4-9b", smoke=True, max_batch=2,
+                          page_size=8, num_pages=32, kv_window=3, max_seq=48)
+    with Fabric.open(config) as fab:
+        uids = fab.submit_many([[i + 1, 7, 3] for i in range(4)],
+                               max_new_tokens=4, qclass="chat")
+        done = fab.drain(max_steps=200)
+        for u in uids:
+            print(f"req {u}: {done[u].output}")
+        print(f"slo: {fab.stats()['slo']['chat']}")
+        assert all(u in done for u in uids)
     print("quickstart OK")
 
 

@@ -1,5 +1,6 @@
-"""Serve a small model with batched requests through the CMP paged-KV engine,
-including an overload phase that demonstrates preemption + window recovery.
+"""Serve a small model with batched requests through the CMP paged-KV
+engine — one declarative config, one `Fabric` session — including an
+overload phase that demonstrates preemption + window recovery.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -8,32 +9,29 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax                                                  # noqa: E402
-
-from repro.configs import get_config                        # noqa: E402
-from repro.models import init_params                        # noqa: E402
-from repro.serving.engine import Engine                     # noqa: E402
+from repro.fabric import Fabric, FabricConfig                # noqa: E402
 
 
 def main():
-    cfg = get_config("glm4-9b", smoke=True)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-
     # Tight page pool on purpose: overload will trigger preemption, and the
     # CMP window recycles the preempted request's pages automatically.
-    eng = Engine(cfg, params, max_batch=3, page_size=8, num_pages=24,
-                 window=3, max_seq=64)
+    config = FabricConfig(arch="glm4-9b", smoke=True, max_batch=3,
+                          page_size=8, num_pages=24, kv_window=3, max_seq=64)
     prompts = [[i + 1, (3 * i) % 40 + 2, 7] for i in range(9)]
-    # One batched submission for the whole burst: a single class-cycle-range
-    # fetch-add and one splice per shard (Engine.submit_many).
-    uids = eng.submit_many(prompts, max_new_tokens=6)
-    done = eng.run_until_idle(max_steps=500)
-    preempted = sum(done[u].preemptions for u in uids)
-    for u in uids:
-        print(f"req {u}: {done[u].output} (preemptions={done[u].preemptions})")
-    print(f"\nall {len(uids)} requests served; {preempted} preemptions "
-          f"recovered via the protection window; "
-          f"free pages {eng.pool.free_pages()}/{eng.pool.num_pages}")
+    with Fabric.open(config) as fab:
+        # One batched submission for the whole burst: a single
+        # class-cycle-range fetch-add and one splice per shard.
+        uids = fab.submit_many(prompts, max_new_tokens=6)
+        done = fab.drain(max_steps=500)
+        preempted = sum(done[u].preemptions for u in uids)
+        for u in uids:
+            print(f"req {u}: {done[u].output} "
+                  f"(preemptions={done[u].preemptions})")
+        pool = fab.engines[0].pool
+        print(f"\nall {len(uids)} requests served; {preempted} preemptions "
+              f"recovered via the protection window; "
+              f"free pages {pool.free_pages()}/{pool.num_pages}")
+        assert all(u in done for u in uids), "a request was dropped"
 
 
 if __name__ == "__main__":

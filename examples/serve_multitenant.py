@@ -1,6 +1,6 @@
-"""Multi-tenant serving on the priority-class CMP queue fabric: mixed
-interactive/batch/background traffic through one engine, class-aware
-preemption, per-class admission telemetry.
+"""Multi-tenant serving on the fabric API: mixed interactive/batch/
+background traffic through one declarative config, class-aware preemption,
+per-class admission telemetry and the SLO view.
 
   PYTHONPATH=src python examples/serve_multitenant.py [--policy strict|wfq|fifo]
 
@@ -8,7 +8,7 @@ Interactive requests preempt background lanes under pool pressure; the
 victims re-enter their own class at their original cycle seat (strict FIFO
 within the class survives preemption). Compare policies with --policy; the
 scheduler benchmark (benchmarks/run.py --only sched) quantifies the
-latency separation.
+latency separation. Self-asserting.
 """
 
 import argparse
@@ -17,12 +17,7 @@ import time
 
 sys.path.insert(0, "src")
 
-import jax                                                  # noqa: E402
-
-from repro.configs import get_config                        # noqa: E402
-from repro.models import init_params                        # noqa: E402
-from repro.sched import QueueClass                          # noqa: E402
-from repro.serving.engine import Engine                     # noqa: E402
+from repro.fabric import Fabric, FabricConfig, tiered_classes  # noqa: E402
 
 
 def main():
@@ -31,59 +26,64 @@ def main():
                     choices=("strict", "wfq", "fifo"))
     args = ap.parse_args()
 
-    cfg = get_config("glm4-9b", smoke=True)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-
-    classes = [
-        QueueClass("interactive", priority=2, weight=8.0),
-        QueueClass("batch", priority=1, weight=3.0),
-        # background gets a finite admission window: beyond 6 in flight the
-        # class rejects (backpressure) instead of growing without bound
-        QueueClass("background", priority=0, weight=1.0, admit_window=6),
-    ]
-    # Tight page pool on purpose: interactive arrivals preempt background
-    # lanes, and the CMP window recycles the victims' pages automatically.
-    eng = Engine(cfg, params, max_batch=3, page_size=8, num_pages=24,
-                 window=3, max_seq=64, classes=classes, policy=args.policy)
+    # The standard 3-tier tenant set; background gets a finite admission
+    # window — beyond 6 in flight the class rejects (backpressure) instead
+    # of growing without bound. Tight page pool on purpose: interactive
+    # arrivals preempt background lanes, the CMP window recycles the pages.
+    config = FabricConfig(
+        classes=tiered_classes(background_window=6,
+                               interactive_slo_ms=30000.0,
+                               batch_slo_ms=120000.0),
+        policy=args.policy, arch="glm4-9b", smoke=True, max_batch=3,
+        page_size=8, num_pages=24, kv_window=3, max_seq=64)
+    fab = Fabric.open(config)
 
     t0 = time.time()
     uids = {"interactive": [], "batch": [], "background": []}
     # background + batch load first, interactive bursts arriving on top
     for i in range(8):
-        u = eng.submit([40 + i, 3, 7], max_new_tokens=5, qclass="background")
+        u = fab.submit([40 + i, 3, 7], max_new_tokens=5, qclass="background")
         if u is not None:
             uids["background"].append(u)
     uids["batch"] = [u for u in
-                     eng.submit_many([[20 + i, 5, 9] for i in range(4)],
+                     fab.submit_many([[20 + i, 5, 9] for i in range(4)],
                                      max_new_tokens=5, qclass="batch")
                      if u is not None]
     for i in range(4):
         uids["interactive"].append(
-            eng.submit([i + 1, 2, 3], max_new_tokens=4, qclass="interactive"))
-        eng.step()  # interactive arrives mid-flight, not as a pre-load
+            fab.submit([i + 1, 2, 3], max_new_tokens=4, qclass="interactive"))
+        fab.step()  # interactive arrives mid-flight, not as a pre-load
 
-    done = eng.run_until_idle(max_steps=800)
+    done = fab.drain(max_steps=800)
     dt = time.time() - t0
 
     rejected = 8 - len(uids["background"])
-    print(f"policy={args.policy}  wall={dt:.1f}s  steps={eng.step_count}")
+    print(f"policy={args.policy}  wall={dt:.1f}s  steps={fab.step_count}")
     for name, us in uids.items():
         served = [done[u] for u in us if u in done]
         pre = sum(r.preemptions for r in served)
         print(f"  {name:12s} served={len(served)}/{len(us)} "
               f"preemptions={pre}")
     print(f"  background rejected by admission window: {rejected}")
-    for name, snap in eng.class_stats().items():
+    stats = fab.stats()
+    for name, snap in stats["classes"].items():
+        slo = stats["slo"][name]
         print(f"  [{name}] submitted={snap['submitted']} "
               f"delivered={snap['delivered']} requeued={snap['requeued']} "
               f"rejected={snap['rejected']} "
-              f"admit_p50_ms={snap['admit_p50_ms'] and round(snap['admit_p50_ms'], 2)} "
-              f"admit_p99_ms={snap['admit_p99_ms'] and round(snap['admit_p99_ms'], 2)}")
+              f"admit_p99_ms={snap['admit_p99_ms'] and round(snap['admit_p99_ms'], 2)} "
+              f"slo_target_ms={slo['target_ms']} slo_ok={slo['ok']}")
     assert all(u in done for us in uids.values() for u in us), \
         "an admitted request was dropped"
+    # the SLO view is wired end to end: targets configured on the latency
+    # tiers, measured p99 reported against them
+    assert stats["slo"]["interactive"]["target_ms"] == 30000.0
+    assert stats["slo"]["interactive"]["ok"] is not None
+    assert stats["slo"]["background"]["target_ms"] is None
+    pool = fab.engines[0].pool
     print("all admitted requests served; within-class FIFO kept through "
-          "preemption; pages free "
-          f"{eng.pool.free_pages()}/{eng.pool.num_pages}")
+          f"preemption; pages free {pool.free_pages()}/{pool.num_pages}")
+    fab.close()
 
 
 if __name__ == "__main__":

@@ -1,15 +1,15 @@
-"""Sharded engine replicas with steal-rebalanced drains and exact-seat
-frontier checkpointing (DESIGN.md §9).
+"""Live replica elasticity + in-loop frontier checkpointing through the
+fabric API (DESIGN.md §9-10).
 
   PYTHONPATH=src python examples/serve_replicated.py [--replicas 2]
 
-Two engine replicas serve a 3-class wave from one fabric: each replica owns
-a seat subset of every class (its own lanes, its own page pool, its own
-policy drain) and a starved replica steals a whole cycle-run with one CAS.
-Mid-wave the demo takes an exact-seat frontier checkpoint, kills the whole
-group (replica crash), restores from the snapshot, and finishes the wave —
-every tenant resumes at its exact FIFO seat; nothing is lost or served
-twice.
+One declarative config opens a single-replica fabric serving a 3-class
+wave; mid-wave it live-resizes to N replicas (a batch of seat claims plus a
+lane/page budget re-split — producers never pause), the checkpoint cadence
+writes exact-seat frontier snapshots as it runs, the whole group is killed
+(replica crash), and `Fabric.restore` resumes from the cadence checkpoint
+to finish the wave — every tenant at its exact FIFO seat; nothing lost or
+served twice. Self-asserting.
 """
 
 import argparse
@@ -18,24 +18,7 @@ import time
 
 sys.path.insert(0, "src")
 
-import jax                                                  # noqa: E402
-
-from repro.checkpoint.checkpointer import (restore_aux,     # noqa: E402
-                                           save)
-from repro.configs import get_config                        # noqa: E402
-from repro.models import init_params                        # noqa: E402
-from repro.sched import QueueClass                          # noqa: E402
-from repro.serving.engine import EngineReplicaGroup         # noqa: E402
-
-
-def make_classes(num_shards):
-    return [
-        QueueClass("interactive", priority=2, weight=8.0,
-                   num_shards=num_shards),
-        QueueClass("batch", priority=1, weight=3.0, num_shards=num_shards),
-        QueueClass("background", priority=0, weight=1.0,
-                   num_shards=num_shards),
-    ]
+from repro.fabric import Fabric, FabricConfig, tiered_classes  # noqa: E402
 
 
 def main():
@@ -44,37 +27,36 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/serve_replicated_ckpt")
     args = ap.parse_args()
 
-    cfg = get_config("glm4-9b", smoke=True)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-
-    grp = EngineReplicaGroup(cfg, params, num_replicas=args.replicas,
-                             max_batch=2 * args.replicas, page_size=8,
-                             num_pages=24 * args.replicas, window=3,
-                             max_seq=64, classes=make_classes(args.replicas))
+    config = FabricConfig(
+        classes=tiered_classes(), replicas=1, max_replicas=args.replicas,
+        arch="glm4-9b", smoke=True, max_batch=2 * args.replicas,
+        page_size=8, num_pages=24 * args.replicas, kv_window=3, max_seq=64,
+        checkpoint_dir=args.ckpt_dir, checkpoint_every_n_steps=2)
+    fab = Fabric.open(config)
 
     t0 = time.time()
     uids, tenant_of = [], {}
     wave = [("interactive", 4), ("batch", 4), ("background", 4)]
     for name, n in wave:
-        for u in grp.submit_many([[10 + i, 3, 7] for i in range(n)],
+        for u in fab.submit_many([[10 + i, 3, 7] for i in range(n)],
                                  max_new_tokens=4, qclass=name):
             uids.append(u)
             tenant_of[u] = name
 
-    for _ in range(2):  # part of the wave decodes...
-        grp.step()
-    step, state = grp.step_count, grp.sched_state()
-    save(args.ckpt_dir, step, {}, aux={"sched": state})  # ...then: snapshot,
-    done_before = dict(grp.completed)
-    del grp                                              # crash,
+    fab.step()                      # part of the wave decodes on 1 replica,
+    fab.resize(args.replicas)       # ...then: live resize under load,
+    fab.step()                      # cadence checkpoint fires (step 2),
+    fab.step()
+    fab.flush_checkpoints()         # snapshots durably on disk,
+    ck_step = max(fab.stats()["checkpoint"]["written"])
+    done_before = dict(fab.completed)
+    del fab                         # crash,
 
-    ck_step, aux = restore_aux(args.ckpt_dir)            # restore.
-    assert ck_step == step and aux is not None
-    grp2 = EngineReplicaGroup.from_sched_state(
-        cfg, params, aux["sched"], max_batch=2 * args.replicas, page_size=8,
-        num_pages=24 * args.replicas, window=3, max_seq=64)
-    pending = grp2.replica_set.pending()
-    done_after = grp2.run_until_idle(max_steps=400)
+    fab2 = Fabric.restore(args.ckpt_dir)  # restore from the cadence ckpt.
+    assert fab2.step_count == ck_step
+    assert fab2.num_replicas == args.replicas, "resize survived checkpoint"
+    pending = fab2.pending()
+    done_after = fab2.drain(max_steps=400)
     dt = time.time() - t0
 
     served = {**done_before, **done_after}
@@ -82,21 +64,22 @@ def main():
     dup = [u for u in done_before if u in done_after]
     assert not missing, f"lost across restore: {missing}"
     assert not dup, f"served twice across restore: {dup}"
-    print(f"replicas={args.replicas}  wall={dt:.1f}s  "
-          f"checkpoint@step {step} ({pending} seats resumed)")
+    print(f"replicas=1->{args.replicas} (live)  wall={dt:.1f}s  "
+          f"cadence checkpoint@step {ck_step} ({pending} seats resumed)")
+    stats = fab2.stats()
     for name, _ in wave:
         mine = sorted(u for u in uids if tenant_of[u] == name)
-        state_cls = aux["sched"]["classes"][name]
+        cs = stats["classes"][name]
         print(f"  {name:12s} served={sum(1 for u in mine if u in served)}"
-              f"/{len(mine)} ckpt(seq={state_cls['seq']} "
-              f"frontier={state_cls['frontier']} "
-              f"requeued={len(state_cls['requeue'])})")
-    for rid, r in grp2.replica_stats().items():
+              f"/{len(mine)} requeued-at-seat={cs['requeued']}")
+    for rid, r in stats["replicas"].items():
         print(f"  replica {rid}: steals={r['steals']} "
               f"stolen_cycles={r['stolen_cycles']} "
               f"empty_drains={r['empty_drains']}")
+    fab2.close()
     print("every tenant resumed at its exact FIFO seat; "
-          f"{len(done_before)} served pre-crash, {len(done_after)} post-restore")
+          f"{len(done_before)} served pre-crash, {len(done_after)} "
+          f"post-restore")
 
 
 if __name__ == "__main__":

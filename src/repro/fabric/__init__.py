@@ -1,0 +1,21 @@
+"""`repro.fabric` — one declarative session API over queues, scheduler,
+replicas, and serving (DESIGN.md §10).
+
+  - :mod:`repro.fabric.config`  — :class:`FabricConfig` / :class:`ClassSpec`
+    (frozen, validated, JSON round-trip) + the standard
+    :func:`tiered_classes` tenant set.
+  - :mod:`repro.fabric.session` — :class:`Fabric`: ``open`` / ``submit`` /
+    ``step`` / ``drain`` / ``stats`` / ``snapshot`` / ``restore`` /
+    ``resize`` (live elasticity) / ``close``, with an in-loop checkpoint
+    cadence for a bounded recovery point.
+  - :mod:`repro.fabric.compat`  — deprecation shims mapping the old
+    hand-wired constructors onto the new API.
+"""
+
+from repro.fabric.config import (ClassSpec, FabricConfig, FabricConfigError,
+                                 tiered_classes)
+from repro.fabric.session import Fabric
+from repro.fabric import compat  # noqa: F401  (old->new constructor shims)
+
+__all__ = ["ClassSpec", "FabricConfig", "FabricConfigError", "Fabric",
+           "compat", "tiered_classes"]

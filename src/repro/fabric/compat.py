@@ -1,0 +1,84 @@
+"""Deprecation shims: the pre-fabric hand-wired constructors, re-expressed
+as one :class:`FabricConfig` (DESIGN.md §10 has the old->new map).
+
+Before PR 4, standing up the system meant wiring ``QueueClass`` shards +
+``Scheduler``/``ReplicaSet`` + ``Engine``/``EngineReplicaGroup`` by hand in
+every driver. Those classes remain the internal layer (import and use them
+freely for surgery); these shims cover the old *entry-point* signatures so
+existing drivers migrate with a one-line change, and warn so they finish
+the migration. Each returns a live :class:`Fabric` session.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Sequence, Tuple
+
+from repro.fabric.config import ClassSpec, FabricConfig
+from repro.fabric.session import Fabric
+
+
+def _warn(old: str) -> None:
+    warnings.warn(
+        f"hand-wiring {old} is deprecated: declare a FabricConfig and call "
+        f"Fabric.open (DESIGN.md §10 maps every old argument)",
+        DeprecationWarning, stacklevel=3)
+
+
+def class_specs(classes) -> Tuple[Tuple[ClassSpec, ...], int]:
+    """Map live ``QueueClass`` objects to declarative specs; returns the
+    specs plus the shard count they were built with."""
+    if not classes:
+        return (ClassSpec("default"),), 1
+    specs = tuple(ClassSpec(qc.name, priority=qc.priority, weight=qc.weight,
+                            admit_window=qc.admit_window) for qc in classes)
+    return specs, max(len(qc.shards) for qc in classes)
+
+
+def open_engine(cfg, params, *, classes=None, policy="strict",
+                max_batch: int = 4, page_size: int = 16, num_pages: int = 64,
+                window: int = 4, max_seq: int = 128) -> Fabric:
+    """Old: ``Engine(cfg, params, classes=..., policy=...)`` hand-wired in a
+    driver. New: a single-replica serving fabric."""
+    _warn("Engine(...)")
+    specs, shards = class_specs(classes)
+    config = FabricConfig(classes=specs, shards_per_class=shards,
+                          policy=policy, arch=cfg.name,
+                          max_batch=max_batch, page_size=page_size,
+                          num_pages=num_pages, kv_window=window,
+                          max_seq=max_seq)
+    return Fabric.open(config, params=params, model_cfg=cfg)
+
+
+def open_replica_group(cfg, params, *, num_replicas: int = 2, classes=None,
+                       policy="strict", min_steal: int = 1,
+                       max_batch: int = 4, page_size: int = 16,
+                       num_pages: int = 64, window: int = 4,
+                       max_seq: int = 128) -> Fabric:
+    """Old: ``EngineReplicaGroup(cfg, params, num_replicas=...)``. New: a
+    serving fabric with ``replicas=N`` (and live ``resize``)."""
+    _warn("EngineReplicaGroup(...)")
+    specs, shards = class_specs(classes)
+    config = FabricConfig(classes=specs, replicas=num_replicas,
+                          shards_per_class=max(shards, num_replicas),
+                          policy=policy, min_steal=min_steal, arch=cfg.name,
+                          max_batch=max_batch, page_size=page_size,
+                          num_pages=num_pages, kv_window=window,
+                          max_seq=max_seq)
+    return Fabric.open(config, params=params, model_cfg=cfg)
+
+
+def open_replica_set(classes: Sequence, *, num_replicas: int = 1,
+                     policy="strict", min_steal: int = 1,
+                     queue_window: Optional[int] = None,
+                     drain_k: int = 8) -> Fabric:
+    """Old: ``ReplicaSet(Scheduler(classes), N)`` hand-wired in a benchmark
+    or pipeline. New: a scheduler-only fabric (``arch=None``)."""
+    _warn("Scheduler(...) + ReplicaSet(...)")
+    specs, shards = class_specs(classes)
+    kw = {} if queue_window is None else {"queue_window": queue_window}
+    config = FabricConfig(classes=specs,
+                          shards_per_class=max(shards, num_replicas),
+                          replicas=num_replicas, policy=policy,
+                          min_steal=min_steal, drain_k=drain_k, **kw)
+    return Fabric.open(config)

@@ -1,0 +1,237 @@
+"""Declarative fabric configuration (DESIGN.md §10).
+
+The paper's thesis is that one mechanism — cycle clock + bounded window —
+replaces a zoo of coordination schemes. The public API should read the same
+way: standing up the whole serving fabric (class queues, scheduler replicas,
+engine group, checkpoint cadence) is *one* frozen config handed to
+:meth:`repro.fabric.Fabric.open`, not hand-wired ``QueueClass`` /
+``ReplicaSet`` / ``EngineReplicaGroup`` plumbing repeated in every driver.
+
+Everything here is host-only plain data: no jax import, JSON round-trip via
+:meth:`FabricConfig.to_json` / :meth:`FabricConfig.from_json` (the same dict
+rides checkpoint aux channels, so a fabric restores from its own snapshot
+without the caller re-declaring anything).
+
+Validation is eager (``__post_init__``) and actionable: combinations that
+the old flag-wired serve.py accepted silently — a cross-class policy with a
+single class, a checkpoint cadence with nowhere to write, frontier snapshots
+shadowing the params checkpoint — raise :class:`FabricConfigError` naming
+the fix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+_POLICIES = ("strict", "wfq", "fifo")
+
+
+class FabricConfigError(ValueError):
+    """An invalid or self-contradictory :class:`FabricConfig`."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSpec:
+    """One tenant/priority class, declaratively.
+
+    ``slo_ms`` is a per-class admission-latency target (p99, milliseconds):
+    telemetry-only for now — :meth:`Fabric.stats` reports measured
+    ``admit_p99_ms`` against it under the ``"slo"`` key (groundwork for the
+    SLO-aware policy ROADMAP item; no policy behavior changes).
+    """
+
+    name: str
+    priority: int = 0
+    weight: float = 1.0
+    admit_window: Optional[int] = None
+    slo_ms: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Everything needed to open (or restore) a fabric session.
+
+    Scheduler half (always active):
+      classes: the tenant/priority classes (at least one).
+      replicas: scheduler/engine replicas to start with.
+      max_replicas: live-resize ceiling — seats are provisioned per class at
+        open (one shard per potential replica), so ``Fabric.resize(n)`` up
+        to this count needs no re-shard. Defaults to ``replicas``.
+      shards_per_class: CMP shards per class; defaults to ``max_replicas``
+        (every replica needs at least one seat per class).
+      policy: cross-class drain policy — strict | wfq | fifo.
+      queue_window / reclaim_period: each shard's CMPQueue protection
+        window and reclaim cadence.
+      min_steal: smallest backlog worth a seat steal.
+      drain_k: per-replica drain batch size (scheduler-only fabrics).
+
+    Serving half (``arch`` set -> a full engine group; ``None`` -> a
+    scheduler-only fabric, e.g. for benchmarks):
+      arch/smoke/param_seed: model config + deterministic init.
+      params_dir: optional params checkpoint to restore weights from.
+      max_batch / num_pages: fabric-wide lane and page budgets, partitioned
+        across replicas (and re-partitioned on resize).
+      page_size / max_seq / kv_window: paged-KV pool geometry + protection
+        window.
+
+    Checkpoint cadence:
+      checkpoint_dir: frontier-snapshot directory (exact-seat resume).
+      checkpoint_every_n_steps: write one snapshot via the async
+        checkpointer every N ``Fabric.step`` calls — the running fabric's
+        bounded recovery point. ``None`` = only on ``close()``.
+      checkpoint_window: async writer's bounded retention (CMP window).
+    """
+
+    classes: Tuple[ClassSpec, ...] = (ClassSpec("default"),)
+    replicas: int = 1
+    max_replicas: Optional[int] = None
+    shards_per_class: Optional[int] = None
+    policy: str = "strict"
+    queue_window: int = 4096
+    reclaim_period: int = 32
+    min_steal: int = 1
+    drain_k: int = 8
+    # serving half
+    arch: Optional[str] = None
+    smoke: bool = True
+    param_seed: int = 0
+    params_dir: Optional[str] = None
+    max_batch: int = 4
+    page_size: int = 16
+    num_pages: int = 64
+    max_seq: int = 128
+    kv_window: int = 4
+    # checkpoint cadence
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every_n_steps: Optional[int] = None
+    checkpoint_window: int = 2
+
+    def __post_init__(self):
+        # normalize: accept any iterable of ClassSpec (or spec dicts), then
+        # resolve the replica/seat defaults so validation and JSON output
+        # always see concrete numbers
+        specs = tuple(c if isinstance(c, ClassSpec) else ClassSpec(**c)
+                      for c in self.classes)
+        object.__setattr__(self, "classes", specs)
+        if self.max_replicas is None:
+            object.__setattr__(self, "max_replicas", self.replicas)
+        if self.shards_per_class is None:
+            object.__setattr__(self, "shards_per_class", self.max_replicas)
+        self.validate()
+
+    # ------------------------------------------------------------ validation
+    def validate(self) -> None:
+        def bad(msg: str) -> None:
+            raise FabricConfigError(f"FabricConfig: {msg}")
+
+        if not self.classes:
+            bad("declare at least one class (classes=() serves nobody)")
+        names = [c.name for c in self.classes]
+        if len(set(names)) != len(names):
+            bad(f"duplicate class names {names}: every class needs a "
+                f"unique name (it is the policy and telemetry key)")
+        for c in self.classes:
+            if not c.name:
+                bad("empty class name")
+            if c.weight <= 0:
+                bad(f"class {c.name!r}: weight must be > 0 "
+                    f"(got {c.weight}); weights are fair-share ratios")
+            if c.admit_window is not None and c.admit_window < 1:
+                bad(f"class {c.name!r}: admit_window must be >= 1 or None "
+                    f"(got {c.admit_window})")
+            if c.slo_ms is not None and c.slo_ms <= 0:
+                bad(f"class {c.name!r}: slo_ms must be > 0 or None "
+                    f"(got {c.slo_ms})")
+        if self.policy not in _POLICIES:
+            bad(f"unknown policy {self.policy!r}; choose from "
+                f"{list(_POLICIES)}")
+        if len(self.classes) == 1 and self.policy != "strict":
+            bad(f"cross-class policy {self.policy!r} has no effect with the "
+                f"single class {names[0]!r}: declare multiple classes "
+                f"(serve.py: --multitenant) or drop the policy override")
+        if self.replicas < 1:
+            bad(f"replicas must be >= 1 (got {self.replicas})")
+        if self.max_replicas < self.replicas:
+            bad(f"max_replicas={self.max_replicas} < replicas="
+                f"{self.replicas}: raise max_replicas (the resize ceiling) "
+                f"or start with fewer replicas")
+        if self.shards_per_class < self.max_replicas:
+            bad(f"shards_per_class={self.shards_per_class} < max_replicas="
+                f"{self.max_replicas}: every replica needs at least one "
+                f"seat per class — raise shards_per_class or lower "
+                f"max_replicas")
+        for field, lo in (("queue_window", 1), ("reclaim_period", 1),
+                          ("min_steal", 1), ("drain_k", 1),
+                          ("checkpoint_window", 1)):
+            if getattr(self, field) < lo:
+                bad(f"{field} must be >= {lo} (got {getattr(self, field)})")
+        if self.arch is not None:
+            if self.max_batch < self.max_replicas:
+                bad(f"lane budget max_batch={self.max_batch} cannot give "
+                    f"every replica a lane at max_replicas="
+                    f"{self.max_replicas}: raise max_batch or lower "
+                    f"max_replicas")
+            if self.num_pages < 2 * self.max_replicas:
+                bad(f"page budget num_pages={self.num_pages} cannot give "
+                    f"every replica a scratch page plus one live page at "
+                    f"max_replicas={self.max_replicas}: raise num_pages")
+            if self.page_size < 1 or self.max_seq < self.page_size:
+                bad(f"need max_seq >= page_size >= 1 (got max_seq="
+                    f"{self.max_seq}, page_size={self.page_size})")
+            if self.kv_window < 1:
+                bad(f"kv_window must be >= 1 (got {self.kv_window})")
+        elif self.params_dir is not None:
+            bad("params_dir without arch: a scheduler-only fabric has no "
+                "model params to restore — set arch or drop params_dir")
+        if (self.checkpoint_every_n_steps is not None
+                and self.checkpoint_every_n_steps < 1):
+            bad(f"checkpoint_every_n_steps must be >= 1 or None "
+                f"(got {self.checkpoint_every_n_steps})")
+        if self.checkpoint_every_n_steps is not None \
+                and self.checkpoint_dir is None:
+            bad("checkpoint cadence with nowhere to write: set "
+                "checkpoint_dir or drop checkpoint_every_n_steps")
+        if self.checkpoint_dir is not None \
+                and self.checkpoint_dir == self.params_dir:
+            bad("checkpoint_dir (frontier snapshots) must differ from "
+                "params_dir (model params): a frontier-only step would "
+                "shadow the params checkpoint's `latest`")
+
+    # ------------------------------------------------------------------ JSON
+    def to_json(self) -> dict:
+        """Plain-dict encoding; ``from_json(to_json())`` reproduces the
+        config exactly (asserted in tests). This dict rides checkpoint aux
+        channels so a fabric restores from its own snapshot."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, data: dict) -> "FabricConfig":
+        data = dict(data)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - known)
+        if unknown:
+            raise FabricConfigError(
+                f"FabricConfig.from_json: unknown keys {unknown} "
+                f"(snapshot from a newer/older build?)")
+        if "classes" in data:
+            data["classes"] = tuple(
+                c if isinstance(c, ClassSpec) else ClassSpec(**c)
+                for c in data["classes"])
+        return cls(**data)
+
+
+def tiered_classes(*, background_window: Optional[int] = None,
+                   interactive_slo_ms: float = 50.0,
+                   batch_slo_ms: float = 500.0) -> Tuple[ClassSpec, ...]:
+    """The standard 3-tier tenant set (interactive/batch/background) used by
+    serve.py --multitenant, the examples, and the benchmarks: strict-priority
+    ranks with 8:3:1 fair-share weights, SLO targets on the latency-sensitive
+    tiers, and an optional admission window bounding background in-flight."""
+    return (
+        ClassSpec("interactive", priority=2, weight=8.0,
+                  slo_ms=interactive_slo_ms),
+        ClassSpec("batch", priority=1, weight=3.0, slo_ms=batch_slo_ms),
+        ClassSpec("background", priority=0, weight=1.0,
+                  admit_window=background_window),
+    )

@@ -1,0 +1,387 @@
+"""The fabric session handle (DESIGN.md §10).
+
+One lifecycle object over the whole stack: ``Fabric.open(config)`` stands up
+class queues, scheduler replicas and (when ``config.arch`` is set) the
+engine replica group from a single declarative :class:`FabricConfig`;
+``submit`` / ``step`` / ``drain`` run it; ``resize`` grows or shrinks the
+replica count live (a batch of seat claims + a lane/page budget re-split,
+no drain pause); a ``checkpoint_every_n_steps`` cadence writes exact-seat
+frontier snapshots through the async checkpointer so a running fabric
+always has a bounded recovery point; ``Fabric.restore(dir)`` resumes every
+tenant at its exact FIFO seat.
+
+Two modes, one protocol:
+
+  * **serving** (``config.arch`` set) — a full
+    :class:`~repro.serving.engine.EngineReplicaGroup`: ``submit`` takes
+    token prompts and returns uids, ``step`` returns completed requests.
+  * **scheduler-only** (``config.arch is None``) — the class fabric +
+    :class:`~repro.sched.ReplicaSet` without engines (benchmarks, chaos
+    tests, non-LLM consumers): ``submit`` takes arbitrary payloads and
+    returns envelopes, ``step`` returns ``(view, envelope)`` deliveries.
+
+The serving imports (jax, model configs, the engine) are lazy: a
+scheduler-only fabric is plain host Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.fabric.config import FabricConfig, FabricConfigError
+from repro.sched import QueueClass, ReplicaSet, Scheduler
+
+
+def _build_classes(config: FabricConfig) -> List[QueueClass]:
+    return [
+        QueueClass(spec.name, priority=spec.priority, weight=spec.weight,
+                   num_shards=config.shards_per_class,
+                   admit_window=spec.admit_window,
+                   window=config.queue_window,
+                   reclaim_period=config.reclaim_period)
+        for spec in config.classes]
+
+
+class Fabric:
+    """A running fabric session. Construct via :meth:`open` /
+    :meth:`restore` / :meth:`from_snapshot`; usable as a context manager
+    (``close()`` on exit writes the final frontier checkpoint)."""
+
+    def __init__(self, config: FabricConfig, *, replica_set=None, group=None,
+                 model_cfg=None, params=None, step: int = 0):
+        assert (replica_set is None) != (group is None), \
+            "exactly one of replica_set (sched-only) / group (serving)"
+        self.config = config
+        self._group = group
+        self._replica_set = group.replica_set if group is not None \
+            else replica_set
+        self.model_cfg = model_cfg
+        self.params = params
+        self.step_count = int(step)
+        self._closed = False
+        self._ckpt = None
+        if config.checkpoint_dir is not None:
+            from repro.checkpoint.checkpointer import AsyncCheckpointer
+            self._ckpt = AsyncCheckpointer(config.checkpoint_dir,
+                                           window=config.checkpoint_window)
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def open(cls, config: FabricConfig, *, params=None,
+             model_cfg=None) -> "Fabric":
+        """Stand up a fresh fabric from the declarative config. ``params`` /
+        ``model_cfg`` are overrides for callers that already hold model
+        state (tests, the compat shims); normally both derive from
+        ``config.arch`` (+ ``params_dir``)."""
+        config.validate()
+        classes = _build_classes(config)
+        if config.arch is None:
+            sched = Scheduler(classes, policy=config.policy)
+            rs = ReplicaSet(sched, config.replicas, policy=config.policy,
+                            min_steal=config.min_steal)
+            return cls(config, replica_set=rs)
+        model_cfg, params = cls._model_state(config, model_cfg, params)
+        from repro.serving.engine import EngineReplicaGroup
+        group = EngineReplicaGroup(
+            model_cfg, params, num_replicas=config.replicas,
+            max_batch=config.max_batch, page_size=config.page_size,
+            num_pages=config.num_pages, window=config.kv_window,
+            max_seq=config.max_seq, classes=classes, policy=config.policy,
+            min_steal=config.min_steal)
+        return cls(config, group=group, model_cfg=model_cfg, params=params)
+
+    @classmethod
+    def from_snapshot(cls, snapshot: dict, *, params=None, model_cfg=None,
+                      checkpoint_dir: Optional[str] = None,
+                      overrides: Optional[dict] = None) -> "Fabric":
+        """Rebuild a fabric from a :meth:`snapshot` dict (JSON round-trip
+        safe): the config rides inside it, every tenant resumes at its
+        exact FIFO seat, and the replica count is whatever the snapshot
+        recorded (resizes survive checkpoints).
+
+        ``overrides`` replaces config fields that are safe to change across
+        a restore — policy, engine geometry/budgets, checkpoint cadence —
+        and is re-validated; class declarations and seat structure always
+        come from the snapshot (they ARE the resume state)."""
+        config = FabricConfig.from_json(snapshot["config"])
+        if overrides:
+            for key in ("classes", "shards_per_class", "replicas"):
+                if key in overrides:
+                    raise FabricConfigError(
+                        f"from_snapshot: cannot override {key!r} — it is "
+                        f"part of the seat structure being restored (open a "
+                        f"fresh fabric, or resize() after restoring)")
+            config = dataclasses.replace(config, **overrides)
+        if checkpoint_dir is not None \
+                and checkpoint_dir != config.checkpoint_dir:
+            config = dataclasses.replace(config, checkpoint_dir=checkpoint_dir)
+        step = int(snapshot.get("step", 0))
+        if config.arch is None:
+            rs = ReplicaSet.from_state(snapshot["sched"],
+                                       policy=config.policy,
+                                       min_steal=config.min_steal)
+            return cls(config, replica_set=rs, step=step)
+        model_cfg, params = cls._model_state(config, model_cfg, params)
+        from repro.serving.engine import EngineReplicaGroup
+        group = EngineReplicaGroup.from_sched_state(
+            model_cfg, params, snapshot["sched"], policy=config.policy,
+            min_steal=config.min_steal, window=config.kv_window,
+            max_batch=config.max_batch, page_size=config.page_size,
+            num_pages=config.num_pages, max_seq=config.max_seq)
+        return cls(config, group=group, model_cfg=model_cfg, params=params,
+                   step=step)
+
+    @classmethod
+    def restore(cls, checkpoint_dir: str, *, step: Optional[int] = None,
+                params=None, model_cfg=None,
+                overrides: Optional[dict] = None) -> "Fabric":
+        """Resume from the latest (or a specific) cadence checkpoint in
+        ``checkpoint_dir``: the snapshot carries its own config, so no
+        re-declaration is needed (``overrides`` as in
+        :meth:`from_snapshot`)."""
+        from repro.checkpoint.checkpointer import restore_aux
+        ck_step, aux = restore_aux(checkpoint_dir, step)
+        if aux is None or "fabric" not in aux:
+            raise FabricConfigError(
+                f"checkpoint step {ck_step} in {checkpoint_dir!r} has no "
+                f"fabric snapshot (aux['fabric']): was it written by "
+                f"Fabric, or is this a params-only / pre-fabric directory?")
+        return cls.from_snapshot(aux["fabric"], params=params,
+                                 model_cfg=model_cfg,
+                                 checkpoint_dir=checkpoint_dir,
+                                 overrides=overrides)
+
+    @staticmethod
+    def _model_state(config: FabricConfig, model_cfg, params):
+        import jax
+        from repro.configs import get_config
+        from repro.models import init_params
+        if model_cfg is None:
+            try:
+                model_cfg = get_config(config.arch, smoke=config.smoke)
+            except (ImportError, AttributeError, KeyError) as e:
+                raise FabricConfigError(
+                    f"unknown arch {config.arch!r} ({e}); see "
+                    f"repro.configs.ARCHS") from None
+        if params is None:
+            params = init_params(model_cfg,
+                                 jax.random.PRNGKey(config.param_seed))
+            if config.params_dir is not None:
+                from repro.checkpoint import checkpointer as C
+                _, state = C.restore(config.params_dir, {"params": params})
+                params = state["params"]
+        return model_cfg, params
+
+    def close(self, *, final_checkpoint: bool = True) -> None:
+        """End the session. With a checkpoint dir configured, drains the
+        async writer and (by default) writes one final frontier snapshot so
+        the recovery point is the exact close state."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._ckpt is not None:
+            try:
+                self._ckpt.drain()
+                if final_checkpoint:
+                    from repro.checkpoint.checkpointer import save
+                    save(self.config.checkpoint_dir, self.step_count, {},
+                         aux={"fabric": self.snapshot()})
+            finally:
+                self._ckpt.close()
+
+    def __enter__(self) -> "Fabric":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(final_checkpoint=exc[0] is None)
+
+    # ----------------------------------------------------------------- intro
+    @property
+    def serving(self) -> bool:
+        return self._group is not None
+
+    @property
+    def num_replicas(self) -> int:
+        """Current replica count (tracks :meth:`resize`, unlike
+        ``config.replicas`` which is the opening count)."""
+        return self._replica_set.num_replicas
+
+    @property
+    def replicas(self):
+        """The live :class:`~repro.sched.SchedulerReplica` list — benchmark
+        harnesses drive per-replica drains through this."""
+        return self._replica_set.replicas
+
+    @property
+    def replica_set(self) -> ReplicaSet:
+        return self._replica_set
+
+    @property
+    def engines(self):
+        return self._group.engines if self._group is not None else []
+
+    @property
+    def completed(self) -> Dict[int, Any]:
+        return self._group.completed if self._group is not None else {}
+
+    def pending(self) -> int:
+        """Accepted-but-undelivered items across the fabric."""
+        return self._replica_set.pending()
+
+    def idle(self) -> bool:
+        if self._group is not None:
+            return self._group.idle()
+        return self._replica_set.pending() == 0
+
+    # ---------------------------------------------------------------- client
+    def submit(self, item, *, qclass: Optional[str] = None,
+               max_new_tokens: int = 16):
+        """Serving mode: ``item`` is a token prompt; returns its uid (None
+        on admission-window rejection). Scheduler-only mode: ``item`` is an
+        arbitrary payload; returns its Envelope (None on rejection)."""
+        self._check_open()
+        if self._group is not None:
+            return self._group.submit(item, max_new_tokens=max_new_tokens,
+                                      qclass=qclass)
+        name = qclass or self._replica_set.scheduler.default_class
+        return self._replica_set.submit(name, item)
+
+    def submit_many(self, items: Sequence, *, qclass: Optional[str] = None,
+                    max_new_tokens: int = 16) -> List:
+        """Batched admission (one cycle-range fetch-add + one splice per
+        shard for the burst); rejected entries come back as None."""
+        self._check_open()
+        if self._group is not None:
+            return self._group.submit_many(
+                list(items), max_new_tokens=max_new_tokens, qclass=qclass)
+        name = qclass or self._replica_set.scheduler.default_class
+        return self._replica_set.submit_many(name, list(items))
+
+    # ------------------------------------------------------------------ loop
+    def step(self) -> List:
+        """One fabric iteration: every replica admits/decodes (serving) or
+        drains one batch (scheduler-only), starved replicas steal, and the
+        checkpoint cadence fires when due. Returns completed requests
+        (serving) or ``(view, envelope)`` deliveries (scheduler-only)."""
+        self._check_open()
+        self.step_count += 1
+        if self._group is not None:
+            out = self._group.step()
+        else:
+            out = []
+            for r in self._replica_set.replicas:
+                out.extend(r.drain(self.config.drain_k))
+            self._replica_set.rebalance()
+        every = self.config.checkpoint_every_n_steps
+        if (self._ckpt is not None and every is not None
+                and self.step_count % every == 0):
+            # Never blocks; dropped when the writer lags more than
+            # checkpoint_window snapshots — the recovery point is bounded,
+            # the step loop is not.
+            self._ckpt.submit(self.step_count, {},
+                              aux={"fabric": self.snapshot()})
+        return out
+
+    def drain(self, max_steps: int = 1000):
+        """Run until idle. Returns the completed-request dict (serving) or
+        the list of deliveries made during this call (scheduler-only)."""
+        if self._group is not None:
+            for _ in range(max_steps):
+                self.step()
+                if self._group.idle():
+                    break
+            return self._group.completed
+        out: List = []
+        for _ in range(max_steps):
+            got = self.step()
+            out.extend(got)
+            if not got and self._replica_set.pending() == 0:
+                break
+        return out
+
+    # ------------------------------------------------------------ elasticity
+    def resize(self, num_replicas: int) -> "Fabric":
+        """Live replica elasticity: grow/shrink the running fabric to
+        ``num_replicas`` with no drain pause — a batch of seat claims plus
+        (in serving mode) a lane/page budget re-split. Bounded by
+        ``config.max_replicas`` (seats are provisioned at open)."""
+        self._check_open()
+        n = int(num_replicas)
+        if n < 1 or n > self.config.max_replicas:
+            raise FabricConfigError(
+                f"resize({n}): replica count must be in [1, max_replicas="
+                f"{self.config.max_replicas}] — seats are provisioned at "
+                f"open; raise max_replicas in the config to resize further")
+        if self._group is not None:
+            self._group.resize(n)
+        else:
+            self._replica_set.resize(n)
+        return self
+
+    # ------------------------------------------------------------ checkpoint
+    def snapshot(self) -> dict:
+        """JSON-able exact-seat frontier snapshot of the whole session:
+        the config, the fabric step, and every class's cycle counters, seat
+        cursors/owners and undelivered envelopes. Take it at a step
+        boundary; restore with :meth:`from_snapshot`."""
+        if self._group is not None:
+            sched = self._group.sched_state()
+        else:
+            sched = self._replica_set.state()
+        return {"config": self.config.to_json(), "step": self.step_count,
+                "sched": sched}
+
+    def checkpoint(self, *, wait: bool = True) -> bool:
+        """Write a frontier checkpoint now, outside the cadence. Returns
+        False when the async writer's window was full and the snapshot was
+        dropped (never blocks unless ``wait``)."""
+        self._check_open()
+        if self._ckpt is None:
+            raise FabricConfigError(
+                "checkpoint(): no checkpoint_dir configured")
+        ok = self._ckpt.submit(self.step_count, {},
+                               aux={"fabric": self.snapshot()})
+        if wait:
+            self._ckpt.drain()
+        return ok
+
+    def flush_checkpoints(self, timeout: float = 60.0) -> None:
+        """Block until every cadence snapshot handed to the async writer is
+        durably on disk (e.g. before a deliberate kill in tests/demos)."""
+        if self._ckpt is not None:
+            self._ckpt.drain(timeout)
+
+    # ------------------------------------------------------------- telemetry
+    def stats(self) -> dict:
+        """Fabric-wide roll-up: per-class aggregates (via
+        ``aggregate_class_snapshots`` across replicas, continuous across
+        resizes), per-replica steal/idle detail, and the ``"slo"`` view —
+        measured per-class ``admit_p99_ms`` against each class's configured
+        ``slo_ms`` target (read-only groundwork for SLO-aware policies)."""
+        snap = self._replica_set.snapshot()
+        slo = {}
+        for spec in self.config.classes:
+            p99 = snap["classes"][spec.name]["admit_p99_ms"]
+            ok = None if (spec.slo_ms is None or p99 is None) \
+                else p99 <= spec.slo_ms
+            slo[spec.name] = {
+                "target_ms": spec.slo_ms,
+                "admit_p99_ms": p99,
+                "ok": ok,
+                "headroom_ms": (None if spec.slo_ms is None or p99 is None
+                                else spec.slo_ms - p99),
+            }
+        out = {"step": self.step_count, "num_replicas": self.num_replicas,
+               "resizes": self._replica_set.resizes,
+               "classes": snap["classes"], "replicas": snap["replicas"],
+               "slo": slo}
+        if self._ckpt is not None:
+            out["checkpoint"] = {"written": list(self._ckpt.written),
+                                 "dropped": self._ckpt.dropped}
+        return out
+
+    # -------------------------------------------------------------- internal
+    def _check_open(self) -> None:
+        if self._closed:
+            raise FabricConfigError("fabric session is closed")

@@ -1,5 +1,6 @@
-"""Serving driver: continuous-batching engine on the CMP paged-KV pool,
-with optional multi-tenant priority classes (the sched fabric).
+"""Serving driver: the whole system — class queues, scheduler replicas,
+engine group, checkpoint cadence — stood up through one declarative
+`FabricConfig` and driven through one `Fabric` session (DESIGN.md §10).
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --requests 8 --max-new 8
@@ -8,15 +9,35 @@ with optional multi-tenant priority classes (the sched fabric).
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --multitenant --policy wfq --requests 9
 
-  # 2 steal-rebalanced engine replicas with frontier checkpointing:
+  # 2 steal-rebalanced engine replicas, frontier checkpoint every 8 steps:
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
-      --multitenant --replicas 2 --checkpoint-dir /tmp/serve_ckpt
+      --multitenant --replicas 2 --checkpoint-dir /tmp/serve_ckpt \\
+      --checkpoint-every 8
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+
+TENANTS = ("interactive", "batch", "background")
+
+
+def config_from_args(args) -> "FabricConfig":  # noqa: F821
+    """Flags -> one validated FabricConfig. Conflicting combinations that
+    the old hand-wired driver accepted silently (a cross-class --policy
+    without --multitenant, a checkpoint cadence with nowhere to write,
+    --checkpoint-dir shadowing --ckpt-dir) raise FabricConfigError with the
+    fix spelled out."""
+    from repro.fabric import ClassSpec, FabricConfig, tiered_classes
+    classes = tiered_classes() if args.multitenant else (ClassSpec("default"),)
+    return FabricConfig(
+        classes=classes, replicas=args.replicas, policy=args.policy,
+        arch=args.arch, smoke=args.smoke, params_dir=args.ckpt_dir,
+        max_batch=args.max_batch, page_size=args.page_size,
+        num_pages=args.num_pages, max_seq=256, kv_window=args.window,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every_n_steps=args.checkpoint_every)
 
 
 def main() -> None:
@@ -29,7 +50,8 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=128)
     ap.add_argument("--window", type=int, default=4)
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="model-params checkpoint to restore weights from")
     ap.add_argument("--multitenant", action="store_true",
                     help="3 priority classes (interactive/batch/background) "
                          "instead of one FIFO queue")
@@ -37,126 +59,108 @@ def main() -> None:
                     choices=("strict", "wfq", "fifo"),
                     help="cross-class drain policy (with --multitenant)")
     ap.add_argument("--replicas", type=int, default=1,
-                    help="N steal-rebalanced engine replicas, each owning a "
-                         "shard subset of every class and a 1/N lane+page "
-                         "budget (DESIGN.md §9)")
+                    help="N steal-rebalanced engine replicas (live-resized "
+                         "to this count when resuming a checkpoint)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="frontier-checkpoint directory: resumes every "
                          "tenant at its exact FIFO seat if a snapshot "
-                         "exists, and writes one at exit (replica mode)")
+                         "exists; one is written at close")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    help="also write a frontier snapshot every N engine "
+                         "steps (bounded in-loop recovery point)")
     args = ap.parse_args()
-    if args.checkpoint_dir and args.checkpoint_dir == args.ckpt_dir:
-        ap.error("--checkpoint-dir (frontier snapshots) must differ from "
-                 "--ckpt-dir (model params): a frontier-only step would "
-                 "shadow the params checkpoint's `latest`")
+    from repro.fabric import Fabric, FabricConfigError
+    try:
+        config = config_from_args(args)
+    except FabricConfigError as e:
+        ap.error(str(e))
 
-    import jax
-    from repro.configs import get_config
-    from repro.models import init_params
-    from repro.sched import QueueClass
-    from repro.serving.engine import Engine
+    from repro.checkpoint.checkpointer import latest_step
+    fab = None
+    if args.checkpoint_dir and latest_step(args.checkpoint_dir) is not None:
+        # The seat structure (classes/shards/replica count) comes from the
+        # snapshot; knobs that rebuild fresh on restore keep following the
+        # flags, as the pre-fabric driver did.
+        overrides = dict(policy=config.policy, kv_window=config.kv_window,
+                         max_batch=config.max_batch,
+                         page_size=config.page_size,
+                         num_pages=config.num_pages,
+                         max_seq=config.max_seq,
+                         params_dir=config.params_dir,
+                         checkpoint_every_n_steps=(
+                             config.checkpoint_every_n_steps))
+        try:
+            fab = Fabric.restore(args.checkpoint_dir, overrides=overrides)
+        except (FabricConfigError, FileNotFoundError, KeyError) as e:
+            # e.g. a params-only or pre-fabric snapshot format, or flags
+            # incompatible with the snapshot's class structure
+            print(f"[serve] WARNING: cannot resume from "
+                  f"{args.checkpoint_dir}: {e}; starting fresh (snapshot "
+                  f"left untouched)")
+        if fab is not None:
+            need = {c.name for c in config.classes}
+            have = {c.name for c in fab.config.classes}
+            if need != have:
+                print(f"[serve] WARNING: frontier checkpoint has classes "
+                      f"{sorted(have)} but this run needs {sorted(need)}; "
+                      f"starting fresh (snapshot left untouched)")
+                fab.close(final_checkpoint=False)
+                fab = None
+        if fab is not None:
+            print(f"[serve] resumed {fab.num_replicas} replicas from "
+                  f"frontier checkpoint step {fab.step_count}: "
+                  f"{fab.pending()} seats pending")
+            if fab.num_replicas != args.replicas:  # live reseat, no restart
+                try:
+                    fab.resize(args.replicas)
+                    print(f"[serve] live-resized to {args.replicas} "
+                          f"replicas")
+                except FabricConfigError as e:
+                    print(f"[serve] WARNING: --replicas {args.replicas} "
+                          f"ignored ({e}); keeping {fab.num_replicas}")
+    if fab is None:
+        fab = Fabric.open(config)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    if args.ckpt_dir:
-        from repro.checkpoint import checkpointer as C
-        _, state = C.restore(args.ckpt_dir, {"params": params})
-        params = state["params"]
-
-    shards = max(1, args.replicas)
-    classes = None
-    if args.multitenant:
-        classes = [QueueClass("interactive", priority=2, weight=8.0,
-                              num_shards=shards),
-                   QueueClass("batch", priority=1, weight=3.0,
-                              num_shards=shards),
-                   QueueClass("background", priority=0, weight=1.0,
-                              num_shards=shards)]
-    if args.replicas > 1:
-        from repro.checkpoint.checkpointer import latest_step, restore_aux
-        from repro.serving.engine import EngineReplicaGroup
-        eng_kw = dict(max_batch=args.max_batch, page_size=args.page_size,
-                      num_pages=args.num_pages, max_seq=256)
-        needed = set(c.name for c in classes) if classes else {"default"}
-        resumed = None
-        if args.checkpoint_dir and latest_step(args.checkpoint_dir) is not None:
-            step, aux = restore_aux(args.checkpoint_dir)
-            if aux is not None and "sched" in aux:
-                have = set(aux["sched"]["classes"])
-                if needed <= have:
-                    eng = EngineReplicaGroup.from_sched_state(
-                        cfg, params, aux["sched"], policy=args.policy,
-                        window=args.window, **eng_kw)
-                    resumed = step
-                else:
-                    print(f"[serve] WARNING: frontier checkpoint has classes "
-                          f"{sorted(have)} but this run needs "
-                          f"{sorted(needed)}; starting fresh (snapshot left "
-                          f"untouched)")
-        if resumed is None:
-            eng = EngineReplicaGroup(cfg, params, num_replicas=args.replicas,
-                                     window=args.window, classes=classes,
-                                     policy=args.policy, **eng_kw)
-        else:
-            # the snapshot fixes the replica count (seat ownership is part
-            # of the frontier state) — a differing --replicas is not a
-            # silent reshard
-            if len(eng.engines) != args.replicas:
-                print(f"[serve] WARNING: --replicas {args.replicas} ignored; "
-                      f"checkpoint was taken with {len(eng.engines)} "
-                      f"replicas (reseat is a future roadmap item)")
-            print(f"[serve] resumed {len(eng.engines)} replicas from "
-                  f"frontier checkpoint step {resumed}: "
-                  f"{eng.replica_set.pending()} seats pending")
-    else:
-        eng = Engine(cfg, params, max_batch=args.max_batch,
-                     page_size=args.page_size, num_pages=args.num_pages,
-                     window=args.window, max_seq=256,
-                     classes=classes, policy=args.policy)
-    tenant_cycle = ("interactive", "batch", "background")
-    rng = jax.random.PRNGKey(42)
-    uids, tenant_of = [], {}
     t0 = time.time()
+    uids, tenant_of = [], {}
     for i in range(args.requests):
-        rng, k = jax.random.split(rng)
         plen = 3 + i % 5
-        prompt = [int(t) for t in
-                  jax.random.randint(k, (plen,), 1, cfg.vocab_size)]
-        qclass = tenant_cycle[i % 3] if args.multitenant else None
-        uid = eng.submit(prompt, max_new_tokens=args.max_new, qclass=qclass)
+        prompt = [(7 * i + j) % (fab.model_cfg.vocab_size - 1) + 1
+                  for j in range(plen)]
+        qclass = TENANTS[i % 3] if args.multitenant else None
+        uid = fab.submit(prompt, max_new_tokens=args.max_new, qclass=qclass)
         if uid is not None:
             uids.append(uid)
             tenant_of[uid] = qclass or "default"
-    done = eng.run_until_idle(max_steps=2000)
+    done = fab.drain(max_steps=2000)
     dt = time.time() - t0
     total_tokens = sum(len(done[u].output) for u in uids)
     for u in uids:
         r = done[u]
         print(f"[serve] req {u} ({tenant_of[u]}): {len(r.output)} tokens "
               f"(preemptions={r.preemptions}) -> {r.output[:8]}")
-    if args.replicas > 1:
-        free = sum(e.pool.free_pages() for e in eng.engines)
-        total = sum(e.pool.num_pages for e in eng.engines)
-    else:
-        free, total = eng.pool.free_pages(), eng.pool.num_pages
+    free = sum(e.pool.free_pages() for e in fab.engines)
+    total = sum(e.pool.num_pages for e in fab.engines)
     print(f"[serve] {len(uids)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s); engine steps={eng.step_count}; "
+          f"({total_tokens/dt:.1f} tok/s); fabric steps={fab.step_count}; "
           f"free pages={free}/{total}")
+    stats = fab.stats()
     if args.replicas > 1:
-        for rid, rstats in eng.replica_stats().items():
-            print(f"[serve] replica {rid}: steals={rstats['steals']} "
-                  f"stolen_cycles={rstats['stolen_cycles']} "
-                  f"empty_drains={rstats['empty_drains']}")
+        for rid, rs in stats["replicas"].items():
+            print(f"[serve] replica {rid}: steals={rs['steals']} "
+                  f"stolen_cycles={rs['stolen_cycles']} "
+                  f"empty_drains={rs['empty_drains']}")
     if args.multitenant:
-        for name, cs in eng.class_stats().items():
+        for name, cs in stats["classes"].items():
+            slo = stats["slo"][name]
             print(f"[serve] class {name}: submitted={cs['submitted']} "
-                  f"requeued={cs['requeued']} "
-                  f"p50_ms={cs['admit_p50_ms']} p99_ms={cs['admit_p99_ms']}")
-    if args.replicas > 1 and args.checkpoint_dir:
-        from repro.checkpoint.checkpointer import save
-        path = save(args.checkpoint_dir, eng.step_count, {},
-                    aux={"sched": eng.sched_state()})
-        print(f"[serve] frontier checkpoint written: {path}")
+                  f"requeued={cs['requeued']} p50_ms={cs['admit_p50_ms']} "
+                  f"p99_ms={cs['admit_p99_ms']} "
+                  f"slo_target_ms={slo['target_ms']} slo_ok={slo['ok']}")
+    fab.close()  # writes the final frontier snapshot when --checkpoint-dir
+    if args.checkpoint_dir:
+        print(f"[serve] frontier checkpoint written: step {fab.step_count} "
+              f"in {args.checkpoint_dir}")
 
 
 if __name__ == "__main__":

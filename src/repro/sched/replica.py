@@ -318,6 +318,11 @@ class ReplicaSet:
         assert num_replicas >= 1
         self.scheduler = scheduler
         self.num_replicas = int(num_replicas)
+        self._policy_spec = policy
+        self.min_steal = int(min_steal)
+        self.resizes = 0
+        # per-class roll-up of retired replicas' stats (resize survivors)
+        self._retired: Dict[str, dict] = {}
         self.seats: Dict[str, List[ShardSeat]] = {}
         for qc in scheduler.classes:
             S = len(qc.shards)
@@ -345,6 +350,87 @@ class ReplicaSet:
         """One steal pass: every starved replica claims one deep run."""
         return sum(r.steal_if_starved() for r in self.replicas)
 
+    # ---- live elasticity --------------------------------------------------
+    def resize(self, num_replicas: int) -> int:
+        """Grow/shrink to ``num_replicas`` drain loops over the same fabric:
+        a batch of seat claims plus replica-local state handoff — producers
+        are never paused, and every class keeps its exact delivery order.
+
+        Mechanics (call from the drain control thread, i.e. between drain
+        rounds — producers may keep submitting concurrently):
+
+          * every replica-local envelope whose seat cursor has already
+            advanced (requeue heaps, policy-held heads) is carried to the
+            seat's *new* owner, seat-ordered;
+          * staged claims (seat not yet reached) are republished into their
+            home shard — the new owner's cursor, not queue position, drives
+            delivery, so a tail republish is order-safe (the same move a
+            steal victim makes in :meth:`ClassView._release_lost`);
+          * seat ownership is re-claimed round-robin (seat ``s`` -> replica
+            ``s % n``), one CAS per moving seat; ``next_seat`` cursors are
+            untouched, so delivery resumes at the exact frontier.
+
+        Returns the number of seats that changed owner.
+        """
+        new_n = int(num_replicas)
+        assert new_n >= 1
+        if new_n == self.num_replicas:
+            return 0
+        for qc in self.scheduler.classes:
+            assert len(qc.shards) >= new_n, (
+                f"class {qc.name!r} has {len(qc.shards)} shards; resize to "
+                f"{new_n} replicas needs one seat per replica")
+        # Gather replica-local state. Requeued + policy-held envelopes have
+        # spent their seats (cursor already advanced) and must ride to the
+        # new owner; staged claims go back to their home shard.
+        carried: Dict[str, List[Envelope]] = {
+            qc.name: [] for qc in self.scheduler.classes}
+        for r in self.replicas:
+            for view, env in r.policy.held_items():
+                carried[view.name].append(env)
+            for v in r.views:
+                carried[v.name].extend(v._requeue)
+                v._requeue = []
+                S = len(v.qclass.shards)
+                for env in sorted(v._stage.values()):
+                    v.qclass.shards.queues[env.seq % S].enqueue(env)
+                v._stage.clear()
+                # retire the view's counters into the per-class roll-up so
+                # fabric-wide stats (and the SLO view) survive the resize
+                snaps = [v.stats.snapshot(pending=0, shard_depths=[])]
+                if v.name in self._retired:
+                    snaps.append(self._retired[v.name])
+                self._retired[v.name] = aggregate_class_snapshots(snaps)
+        # The batch of seat claims: reseat round-robin over the new count.
+        moved = 0
+        for seats in self.seats.values():
+            for s, seat in enumerate(seats):
+                target = s % new_n
+                cur = seat.owner.load()
+                while cur != target:
+                    if seat.owner.cas(cur, target):
+                        moved += 1
+                        break
+                    cur = seat.owner.load()
+        self.num_replicas = new_n
+        self.replicas = [
+            SchedulerReplica(rid, self.scheduler, self.seats,
+                             policy=self._policy_spec,
+                             min_steal=self.min_steal)
+            for rid in range(new_n)]
+        for name, envs in carried.items():
+            seats = self.seats[name]
+            for env in sorted(envs):
+                rid = seats[env.seq % len(seats)].owner.load()
+                # direct heap push, not ClassView.requeue(): a carried seat
+                # is a relocation, not a new preemption — the requeued
+                # counter already rode into _retired (and policy-held heads
+                # were never preemptions at all)
+                heapq.heappush(self.replicas[rid].by_name[name]._requeue,
+                               env)
+        self.resizes += 1
+        return moved
+
     def snapshot(self) -> dict:
         out: dict = {"replicas": {}, "classes": {}}
         for r in self.replicas:
@@ -354,8 +440,10 @@ class ReplicaSet:
                 "classes": r.snapshot(),
             }
         for qc in self.scheduler.classes:
-            agg = aggregate_class_snapshots(
-                [r.by_name[qc.name].snapshot() for r in self.replicas])
+            snaps = [r.by_name[qc.name].snapshot() for r in self.replicas]
+            if qc.name in self._retired:  # counters from pre-resize replicas
+                snaps.append(self._retired[qc.name])
+            agg = aggregate_class_snapshots(snaps)
             # submit-side counters live on the class, not the views
             agg["submitted"] = qc.stats.submitted
             agg["rejected"] = qc.stats.rejected

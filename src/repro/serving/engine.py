@@ -389,15 +389,29 @@ class EngineReplicaGroup:
         self.num_replicas = replica_set.num_replicas
         self._fwd = forward_fn or jax.jit(
             lambda p, t, kp, vp, bt, sl: paged_forward(p, t, cfg, kp, vp, bt, sl))
-        lanes = _split_budget(max_batch, self.num_replicas)
-        pages = _split_budget(num_pages, self.num_replicas)
-        self.engines = [
-            Engine(cfg, params, max_batch=lanes[r], page_size=page_size,
-                   num_pages=pages[r], window=window, max_seq=max_seq,
-                   sched=self.replica_set.replicas[r], forward_fn=self._fwd)
-            for r in range(self.num_replicas)]
+        # the fabric-wide budgets + geometry, retained so resize() can
+        # re-partition them across a different replica count
+        self.cfg, self.params = cfg, params
+        self._budget = dict(max_batch=max_batch, page_size=page_size,
+                            num_pages=num_pages, window=window,
+                            max_seq=max_seq)
+        self._completed: Dict[int, Request] = {}  # survivors of resizes
+        self.engines = self._build_engines()
         self._next_uid = int(uid_start)
         self.step_count = 0
+
+    def _build_engines(self) -> List[Engine]:
+        """One engine per scheduler replica, the fabric-wide lane and page
+        budgets partitioned across them, all sharing one compiled forward."""
+        lanes = _split_budget(self._budget["max_batch"], self.num_replicas)
+        pages = _split_budget(self._budget["num_pages"], self.num_replicas)
+        return [
+            Engine(self.cfg, self.params, max_batch=lanes[r],
+                   page_size=self._budget["page_size"], num_pages=pages[r],
+                   window=self._budget["window"],
+                   max_seq=self._budget["max_seq"],
+                   sched=self.replica_set.replicas[r], forward_fn=self._fwd)
+            for r in range(self.num_replicas)]
 
     # ---------------------------------------------------------------- client
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -446,10 +460,43 @@ class EngineReplicaGroup:
 
     @property
     def completed(self) -> Dict[int, Request]:
-        out: Dict[int, Request] = {}
+        out: Dict[int, Request] = dict(self._completed)
         for eng in self.engines:
             out.update(eng.completed)
         return out
+
+    # ------------------------------------------------------------- elasticity
+    def resize(self, num_replicas: int) -> "EngineReplicaGroup":
+        """Live replica elasticity: grow/shrink the running group to
+        ``num_replicas`` engines with no drain pause — producers keep
+        submitting throughout, nothing waits for in-flight work to finish.
+
+        A resize is exactly two CMP moves:
+
+          * every active lane is preempted to its exact class-cycle seat
+            (the preemption contract — the request re-prefills on its next
+            admission, served before anything younger in its class), which
+            frees the lanes and pages for re-partitioning;
+          * the scheduler fabric reseats via a batch of seat claims
+            (:meth:`~repro.sched.ReplicaSet.resize`) and the fabric-wide
+            lane/page budgets are re-split over the new engine count.
+
+        Per-class FIFO delivery order is preserved exactly (asserted in
+        tests/test_fabric.py under concurrent producers).
+        """
+        n = int(num_replicas)
+        assert n >= 1
+        if n == self.num_replicas:
+            return self
+        for eng in self.engines:
+            for lane, req in enumerate(eng.active):
+                if req is not None:
+                    eng._evict_lane(lane)  # exact-seat requeue
+            self._completed.update(eng.completed)
+        self.replica_set.resize(n)
+        self.num_replicas = n
+        self.engines = self._build_engines()
+        return self
 
     # ------------------------------------------------------------ checkpoint
     def sched_state(self) -> dict:

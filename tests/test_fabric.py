@@ -1,0 +1,428 @@
+"""The fabric session API (DESIGN.md §10): FabricConfig validation + JSON
+round-trip, scheduler-only and serving sessions, live resize FIFO
+preservation (incl. under concurrent producers), snapshot/restore through
+Fabric, the in-loop checkpoint cadence, the SLO stats view, and the
+deprecation shims."""
+
+import argparse
+import json
+import threading
+
+import pytest
+
+from repro.fabric import (ClassSpec, Fabric, FabricConfig, FabricConfigError,
+                          compat, tiered_classes)
+
+# ---------------------------------------------------------------------------
+# FabricConfig: validation + JSON round trip
+# ---------------------------------------------------------------------------
+
+
+def test_config_rejects_cross_class_policy_with_single_class():
+    with pytest.raises(FabricConfigError, match="single class"):
+        FabricConfig(policy="wfq")
+    with pytest.raises(FabricConfigError, match="single class"):
+        FabricConfig(policy="fifo", classes=(ClassSpec("only"),))
+
+
+def test_config_rejects_checkpoint_cadence_without_dir():
+    with pytest.raises(FabricConfigError, match="nowhere to write"):
+        FabricConfig(checkpoint_every_n_steps=5)
+
+
+def test_config_rejects_frontier_dir_shadowing_params_dir():
+    with pytest.raises(FabricConfigError, match="must differ"):
+        FabricConfig(arch="glm4-9b", params_dir="/tmp/x",
+                     checkpoint_dir="/tmp/x")
+
+
+def test_config_rejects_bad_replica_and_seat_counts():
+    with pytest.raises(FabricConfigError, match="seat per class"):
+        FabricConfig(shards_per_class=2, replicas=4)
+    with pytest.raises(FabricConfigError, match="max_replicas"):
+        FabricConfig(replicas=4, max_replicas=2)
+    with pytest.raises(FabricConfigError, match="replicas must be >= 1"):
+        FabricConfig(replicas=0)
+
+
+def test_config_rejects_bad_classes_and_budgets():
+    with pytest.raises(FabricConfigError, match="unique name"):
+        FabricConfig(classes=(ClassSpec("a"), ClassSpec("a", priority=1)))
+    with pytest.raises(FabricConfigError, match="weight"):
+        FabricConfig(classes=(ClassSpec("a", weight=0.0),))
+    with pytest.raises(FabricConfigError, match="at least one class"):
+        FabricConfig(classes=())
+    with pytest.raises(FabricConfigError, match="unknown policy"):
+        FabricConfig(policy="round-robin")
+    with pytest.raises(FabricConfigError, match="lane budget"):
+        FabricConfig(arch="glm4-9b", replicas=4, max_batch=2, num_pages=64)
+    with pytest.raises(FabricConfigError, match="params_dir without arch"):
+        FabricConfig(params_dir="/tmp/params")
+
+
+def test_config_json_roundtrip_exact():
+    cfg = FabricConfig(
+        classes=tiered_classes(background_window=6),
+        replicas=2, max_replicas=4, shards_per_class=4, policy="wfq",
+        queue_window=512, drain_k=6, arch="yi_6b", max_batch=8,
+        page_size=8, num_pages=64, max_seq=64, kv_window=3,
+        checkpoint_dir="/tmp/ck", checkpoint_every_n_steps=4)
+    wire = json.loads(json.dumps(cfg.to_json()))
+    assert FabricConfig.from_json(wire) == cfg
+    with pytest.raises(FabricConfigError, match="unknown keys"):
+        FabricConfig.from_json({**wire, "warp_factor": 9})
+
+
+def test_serve_flag_combinations_fail_actionably():
+    """ISSUE satellite: flag combos the old driver accepted silently now
+    raise from FabricConfig with the fix named."""
+    from repro.launch.serve import config_from_args
+
+    def ns(**kw):
+        base = dict(arch="glm4-9b", smoke=True, max_batch=4, page_size=16,
+                    num_pages=128, window=4, ckpt_dir=None, multitenant=False,
+                    policy="strict", replicas=1, checkpoint_dir=None,
+                    checkpoint_every=None)
+        base.update(kw)
+        return argparse.Namespace(**base)
+
+    with pytest.raises(FabricConfigError, match="--multitenant"):
+        config_from_args(ns(policy="wfq"))  # policy without classes
+    with pytest.raises(FabricConfigError, match="must differ"):
+        config_from_args(ns(checkpoint_dir="/tmp/d", ckpt_dir="/tmp/d"))
+    with pytest.raises(FabricConfigError, match="nowhere to write"):
+        config_from_args(ns(checkpoint_every=8))
+    # --checkpoint-dir without --replicas used to be silently ignored; under
+    # the fabric it is simply valid (a 1-replica group checkpoints too)
+    cfg = config_from_args(ns(checkpoint_dir="/tmp/d"))
+    assert cfg.checkpoint_dir == "/tmp/d" and cfg.replicas == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler-only sessions: delivery, resize, snapshot/restore
+# ---------------------------------------------------------------------------
+
+
+def _two_class_config(**kw):
+    base = dict(classes=(ClassSpec("hi", priority=2, weight=4.0),
+                         ClassSpec("lo", priority=0, weight=1.0)),
+                shards_per_class=4, replicas=1, max_replicas=4,
+                queue_window=4096, drain_k=6)
+    base.update(kw)
+    return FabricConfig(**base)
+
+
+def test_schedonly_fabric_exact_class_fifo():
+    fab = Fabric.open(_two_class_config())
+    fab.submit_many([("hi", i) for i in range(100)], qclass="hi")
+    fab.submit_many([("lo", i) for i in range(100)], qclass="lo")
+    streams = {"hi": [], "lo": []}
+    for v, env in fab.drain():
+        streams[v.name].append(env.seq)
+    # single replica: per-class delivery is globally the dense cycle order
+    assert streams["hi"] == list(range(100))
+    assert streams["lo"] == list(range(100))
+    assert fab.pending() == 0
+
+
+def _run_resized_wave(resize_plan, *, per_class=240, shards=4,
+                      concurrent=True):
+    """Run a 2-class wave (concurrent producer threads) through a fabric,
+    resizing at the planned steps; returns per-class delivered seq
+    streams in wall order."""
+    fab = Fabric.open(_two_class_config(shards_per_class=shards))
+    names = ("hi", "lo")
+
+    def produce(name):
+        for i in range(per_class):
+            fab.submit((name, i), qclass=name)
+
+    ts = [threading.Thread(target=produce, args=(n,)) for n in names]
+    if concurrent:
+        for t in ts:
+            t.start()
+    else:
+        for t in ts:
+            t.run()
+    streams = {n: [] for n in names}
+    got_total, step = 0, 0
+    while got_total < per_class * len(names):
+        step += 1
+        assert step < 100000, "fabric did not drain"
+        if step in resize_plan:
+            fab.resize(resize_plan[step])
+        for v, env in fab.step():
+            streams[v.name].append(env.seq)
+            got_total += 1
+    if concurrent:
+        for t in ts:
+            t.join()
+    fab.close()
+    return streams
+
+
+def test_resize_1_4_2_preserves_exact_fifo_under_concurrent_producers():
+    """ISSUE acceptance: Fabric.resize(1->4->2) under concurrent producers
+    never inverts per-class FIFO order — per class every shard cycle-run is
+    delivered in exactly the order a no-resize run delivers it, and the
+    merge is exactly 0..n-1 (nothing lost, duplicated, or reordered)."""
+    per_class, shards = 240, 4
+    base = _run_resized_wave({}, per_class=per_class, shards=shards,
+                             concurrent=False)
+    chaos = _run_resized_wave({4: 4, 9: 2}, per_class=per_class,
+                              shards=shards)
+    for name in ("hi", "lo"):
+        assert sorted(chaos[name]) == list(range(per_class)), \
+            f"{name}: lost/duplicated seats across resizes"
+        for s in range(shards):
+            run_resized = [q for q in chaos[name] if q % shards == s]
+            run_base = [q for q in base[name] if q % shards == s]
+            assert run_resized == run_base, \
+                f"{name} run {s}: delivery diverged from the no-resize run"
+
+
+def test_resize_bounds_enforced():
+    fab = Fabric.open(_two_class_config(max_replicas=2, shards_per_class=2))
+    with pytest.raises(FabricConfigError, match="max_replicas"):
+        fab.resize(3)
+    with pytest.raises(FabricConfigError, match="max_replicas"):
+        fab.resize(0)
+    fab.resize(2)
+    assert fab.num_replicas == 2
+
+
+def test_resize_carries_policy_held_heads():
+    """A fifo-merge policy buffers one head per class between drains; a
+    resize must carry those to the new seat owners (as requeued seats) or
+    the tenants would vanish."""
+    cfg = FabricConfig(classes=(ClassSpec("a"), ClassSpec("b")),
+                       shards_per_class=2, replicas=2, max_replicas=2,
+                       policy="fifo", queue_window=256, drain_k=1)
+    fab = Fabric.open(cfg)
+    for i in range(10):
+        fab.submit(("a", i), qclass="a")
+        fab.submit(("b", i), qclass="b")
+    delivered = [(v.name, e.seq) for v, e in fab.step()]  # k=1: heads held
+    assert sum(r.policy.held() for r in fab.replicas) > 0
+    fab.resize(1)
+    rounds = 0
+    while fab.pending() > 0 and rounds < 1000:
+        rounds += 1
+        delivered += [(v.name, e.seq) for v, e in fab.step()]
+    for name in ("a", "b"):
+        seqs = sorted(s for n, s in delivered if n == name)
+        assert seqs == list(range(10)), \
+            f"{name}: policy-held head lost across resize"
+        # a carried head is a relocation, not a preemption: the requeued
+        # telemetry must not be inflated by the resize
+        assert fab.stats()["classes"][name]["requeued"] == 0
+
+
+def test_snapshot_restore_through_fabric_is_equivalent():
+    """ISSUE satellite: restoring a Fabric from its JSON snapshot delivers
+    exactly what the uninterrupted session would have delivered."""
+    def build():
+        fab = Fabric.open(_two_class_config(replicas=2, shards_per_class=2,
+                                            max_replicas=2))
+        for name in ("hi", "lo"):
+            fab.submit_many([(name, i) for i in range(60)], qclass=name)
+        prefix = [(v.name, e.seq) for _ in range(3)
+                  for v, e in fab.step()]
+        return fab, prefix
+
+    fab_a, prefix_a = build()
+    expected = prefix_a + [(v.name, e.seq) for v, e in fab_a.drain()]
+
+    fab_b, prefix_b = build()
+    assert prefix_b == prefix_a  # deterministic single-thread prefix
+    snap = json.loads(json.dumps(fab_b.snapshot()))
+    fab_c = Fabric.from_snapshot(snap)
+    assert fab_c.num_replicas == 2
+    continued = prefix_b + [(v.name, e.seq) for v, e in fab_c.drain()]
+    assert continued == expected, "restored delivery diverged"
+
+
+def test_restore_accepts_safe_overrides_and_rejects_structural():
+    fab = Fabric.open(_two_class_config())
+    fab.submit_many([("hi", i) for i in range(20)], qclass="hi")
+    fab.step()
+    snap = json.loads(json.dumps(fab.snapshot()))
+    # safe knobs (rebuilt fresh on restore) may follow the caller's flags
+    fab2 = Fabric.from_snapshot(snap, overrides={"drain_k": 3,
+                                                 "min_steal": 2})
+    assert fab2.config.drain_k == 3 and fab2.config.min_steal == 2
+    assert sorted(e.seq for _, e in fab2.drain()) == sorted(
+        e.seq for _, e in fab.drain())
+    # the seat structure IS the resume state: overriding it must refuse
+    with pytest.raises(FabricConfigError, match="seat structure"):
+        Fabric.from_snapshot(snap, overrides={"replicas": 4})
+    # an invalid override combination fails validation, not silently
+    with pytest.raises(FabricConfigError, match="unknown policy"):
+        Fabric.from_snapshot(snap, overrides={"policy": "nope"})
+
+
+def test_stats_slo_view():
+    cfg = FabricConfig(
+        classes=(ClassSpec("fast", priority=1, slo_ms=1e7),
+                 ClassSpec("slow", priority=0, slo_ms=1e-9),
+                 ClassSpec("untargeted", priority=0, weight=2.0)),
+        shards_per_class=1)
+    fab = Fabric.open(cfg)
+    for name in ("fast", "slow", "untargeted"):
+        fab.submit_many([(name, i) for i in range(10)], qclass=name)
+    fab.drain()
+    slo = fab.stats()["slo"]
+    assert slo["fast"]["target_ms"] == 1e7 and slo["fast"]["ok"] is True
+    assert slo["fast"]["headroom_ms"] > 0
+    assert slo["slow"]["ok"] is False and slo["slow"]["headroom_ms"] < 0
+    assert slo["untargeted"]["target_ms"] is None
+    assert slo["untargeted"]["ok"] is None
+    assert slo["untargeted"]["admit_p99_ms"] is not None
+
+
+def test_stats_survive_resize():
+    fab = Fabric.open(_two_class_config())
+    fab.submit_many([("hi", i) for i in range(40)], qclass="hi")
+    for _ in range(3):
+        fab.step()
+    before = fab.stats()["classes"]["hi"]["delivered"]
+    assert before > 0
+    fab.resize(4)
+    after = fab.stats()["classes"]["hi"]
+    assert after["delivered"] >= before, "delivered counter reset by resize"
+    assert after["admit_p99_ms"] is not None, "latency reservoir lost"
+    fab.drain()
+    assert fab.stats()["classes"]["hi"]["delivered"] == 40
+
+
+def test_closed_fabric_refuses_work():
+    fab = Fabric.open(_two_class_config())
+    fab.close()
+    with pytest.raises(FabricConfigError, match="closed"):
+        fab.submit(("hi", 0), qclass="hi")
+    with pytest.raises(FabricConfigError, match="closed"):
+        fab.step()
+
+
+def test_schedonly_cadence_checkpoint_restores_exact(tmp_path):
+    """Cadence snapshots land through the async writer; a fabric killed
+    mid-run restores from the latest one with every seat exact."""
+    ck = str(tmp_path / "frontier")
+    cfg = _two_class_config(checkpoint_dir=ck, checkpoint_every_n_steps=2)
+    fab = Fabric.open(cfg)
+    for name in ("hi", "lo"):
+        fab.submit_many([(name, i) for i in range(80)], qclass=name)
+    streams = {"hi": [], "lo": []}
+    for _ in range(4):  # cadence fires at steps 2 and 4
+        for v, env in fab.step():
+            streams[v.name].append(env.seq)
+    fab.flush_checkpoints()
+    assert fab.stats()["checkpoint"]["written"] == [2, 4]
+    del fab  # killed: no close(), the cadence snapshot is the recovery truth
+
+    fab2 = Fabric.restore(ck)
+    assert fab2.step_count == 4
+    # replay what the killed fabric delivered after its last checkpoint:
+    # those seats were consumed pre-kill, so the restored run re-delivers
+    # nothing before the step-4 frontier and everything after it exactly
+    for v, env in fab2.drain():
+        streams[v.name].append(env.seq)
+    for name in ("hi", "lo"):
+        assert sorted(streams[name]) == list(range(80))
+        assert streams[name] == sorted(streams[name])  # 1 replica: dense
+    fab2.close()
+
+
+# ---------------------------------------------------------------------------
+# serving sessions (smoke model): cadence restore, resize, compat shims
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("yi_6b", smoke=True)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _serving_config(**kw):
+    base = dict(classes=(ClassSpec("hi", priority=1, weight=4.0),
+                         ClassSpec("lo", priority=0, weight=1.0)),
+                shards_per_class=2, replicas=1, max_replicas=2,
+                arch="yi_6b", max_batch=4, page_size=8, num_pages=32,
+                kv_window=2, max_seq=64, queue_window=64)
+    base.update(kw)
+    return FabricConfig(**base)
+
+
+def test_serving_fabric_killed_midrun_restores_from_cadence(model, tmp_path):
+    """ISSUE acceptance: a serving fabric killed mid-run restores from its
+    cadence checkpoint with every tenant at its exact seat — nothing lost,
+    nothing served twice, uids never reused."""
+    mcfg, params = model
+    ck = str(tmp_path / "frontier")
+    cfg = _serving_config(replicas=2, checkpoint_dir=ck,
+                          checkpoint_every_n_steps=2)
+    fab = Fabric.open(cfg, params=params, model_cfg=mcfg)
+    uids = [fab.submit([i + 1, 2, 3], max_new_tokens=3, qclass="hi")
+            for i in range(4)]
+    uids += fab.submit_many([[9, 9 + i] for i in range(4)],
+                            max_new_tokens=3, qclass="lo")
+    fab.step()
+    fab.step()  # cadence fires
+    fab.flush_checkpoints()
+    done_before = dict(fab.completed)
+    del fab  # crash: laned requests and staged claims die with the group
+
+    fab2 = Fabric.restore(ck, params=params, model_cfg=mcfg)
+    assert fab2.step_count == 2 and fab2.num_replicas == 2
+    done_after = fab2.drain(max_steps=300)
+    assert not (set(done_before) & set(done_after)), "served twice"
+    missing = [u for u in uids
+               if u not in done_before and u not in done_after]
+    assert not missing, f"lost across kill+restore: {missing}"
+    # uid continuity across the restore
+    assert fab2.submit([3, 3], max_new_tokens=2, qclass="hi") not in uids
+    fab2.drain(max_steps=100)
+    fab2.close()
+
+
+def test_serving_fabric_resize_under_load(model):
+    """Live elasticity through the engine layer: resize 1->2 mid-wave
+    re-partitions lanes and pages, preempted lanes keep their exact seats,
+    and every request is served exactly once."""
+    mcfg, params = model
+    fab = Fabric.open(_serving_config(), params=params, model_cfg=mcfg)
+    uids = fab.submit_many([[i + 1, 2] for i in range(6)],
+                           max_new_tokens=3, qclass="hi")
+    fab.step()
+    assert len(fab.engines) == 1
+    fab.resize(2)
+    assert fab.num_replicas == 2 and len(fab.engines) == 2
+    assert [e.max_batch for e in fab.engines] == [2, 2]
+    assert sum(e.pool.num_pages for e in fab.engines) == 32
+    done = fab.drain(max_steps=300)
+    assert set(done) >= set(uids), "request lost across resize"
+    assert len(done) == len(set(done)), "request served twice"
+    fab.close()
+
+
+def test_compat_shims_warn_and_work(model):
+    mcfg, params = model
+    from repro.sched import QueueClass
+    with pytest.warns(DeprecationWarning, match="FabricConfig"):
+        fab = compat.open_replica_set(
+            [QueueClass("a", num_shards=2, window=256),
+             QueueClass("b", priority=1, num_shards=2, window=256)],
+            num_replicas=2)
+    fab.submit_many([("a", i) for i in range(20)], qclass="a")
+    assert sorted(e.seq for _, e in fab.drain()) == list(range(20))
+
+    with pytest.warns(DeprecationWarning, match="FabricConfig"):
+        fab2 = compat.open_engine(mcfg, params, max_batch=2, page_size=8,
+                                  num_pages=16, window=2, max_seq=32)
+    u = fab2.submit([1, 2, 3], max_new_tokens=2)
+    done = fab2.drain(max_steps=100)
+    assert u in done and len(done[u].output) == 2
