@@ -35,6 +35,16 @@ GATES = [
     ("cmp.batched.rmw_per_deq", "higher", 1.0),
     ("cmp.scalar.atomics_per_enq", "higher", 1.0),
     ("cmp.scalar.atomics_per_deq", "higher", 1.0),
+    # Live-resize reseat latency (the PR 4 elasticity win, refreshed by
+    # every --quick run). Unlike the counted atomics, this is an absolute
+    # sub-millisecond wall-clock number measured on whatever machine runs
+    # the gate vs a baseline committed from another — so it gates at 20x
+    # the base tolerance (fails only beyond ~4x the baseline): calibrated
+    # to catch the real failure mode, a reseat going accidentally
+    # O(items) (a 20-100x blowup on the 2.4k-item wave), while no
+    # plausible runner-speed difference can trip it.
+    ("replica.elasticity.resize_ms.to_4", "higher", 20.0),
+    ("replica.elasticity.resize_ms.to_2", "higher", 20.0),
 ]
 
 
@@ -58,15 +68,19 @@ def check(baseline: dict, currents: list, tolerance: float) -> int:
             # committed BENCH_queue.json carries the metric.
             print(f"{key:38s} skipped (absent from baseline)")
             continue
-        try:
-            vals = [lookup(c, key) for c in currents]
-            cur = max(vals) if direction == "lower" else min(vals)
-        except KeyError as e:
-            # Present in the baseline but gone from the fresh snapshot:
+        vals = []
+        for c in currents:
+            try:
+                vals.append(lookup(c, key))
+            except KeyError:
+                pass  # a snapshot from a section run that skipped this key
+        if not vals:
+            # Present in the baseline but gone from every fresh snapshot:
             # that is a coverage regression, not noise — fail.
-            print(f"{key:38s} MISSING from current snapshot ({e}) -> fail")
+            print(f"{key:38s} MISSING from all current snapshots -> fail")
             failures += 1
             continue
+        cur = max(vals) if direction == "lower" else min(vals)
         tol = tolerance * tol_mult
         ratio = cur / base if base else float("inf")
         if direction == "lower":

@@ -178,6 +178,115 @@ def recovery_roundtrip(*, items: int = 6000, num_shards: int = 8,
     }
 
 
+def multihost_scaling(hosts: int, *, items: int = 2400, num_shards: int = 4,
+                      drain_k: int = 8, service_s: float = 0.0015,
+                      kill_host: int = None, kill_after_frac: float = 0.25,
+                      drop: float = 0.0, reorder: bool = False,
+                      seed: int = 0) -> Dict:
+    """Multi-host drain scaling over the sim transport (DESIGN.md §11):
+    one replica per simulated host, each paying ``service_s`` of simulated
+    engine-step service per non-empty drain, seats home-aligned at start.
+
+    With ``kill_host`` set, that host is failed once ``kill_after_frac`` of
+    the wave has been delivered: its final frontier state replays through
+    the wire codec into the survivors, its seats are re-claimed, and the
+    surviving drain loops (plus stealing) absorb the load — ``idle_frac``
+    is then measured over the survivors, the quantity host-loss recovery
+    is meant to bound. Exactness is asserted in the PR-3/4 style — per
+    class the union of replica streams is exactly 0..n-1 and every shard
+    cycle-run is delivered in order — which, with the seat cursor's
+    exclusive-advancer rule, pins the per-run delivery order to the dense
+    cycle order, i.e. identical to an uninterrupted single-host run's
+    (the explicit stream-for-stream comparison against a recorded base
+    run lives in tests/test_transport.py's chaos test).
+    """
+    num_replicas = hosts
+    fab = Fabric.open(FabricConfig(
+        classes=tiered_classes(), replicas=num_replicas,
+        max_replicas=num_replicas, shards_per_class=num_shards,
+        queue_window=8192, min_steal=max(1, drain_k // 4), drain_k=drain_k,
+        transport="sim", hosts=hosts, transport_drop=drop,
+        transport_reorder=reorder, transport_seed=seed))
+    per_class = _submit_wave(fab, items)
+    total = sum(per_class.values())
+
+    streams: List[List] = [[] for _ in range(num_replicas)]
+    idle_time = [0.0] * num_replicas
+    done = threading.Event()
+    delivered = [0]
+    killed = [False]
+    lock = threading.Lock()
+
+    def work(rid: int):
+        r = fab.replicas[rid]
+        while not done.is_set() and r.alive:
+            t_poll = time.perf_counter()
+            got = r.drain(drain_k)
+            if not got:
+                if r.alive and r.steal_if_starved():
+                    continue  # claimed a run: drain it before yielding
+                time.sleep(0.0002)
+                idle_time[rid] += time.perf_counter() - t_poll
+                continue
+            streams[rid].extend((v.name, env.seq) for v, env in got)
+            with lock:
+                delivered[0] += len(got)
+                if delivered[0] >= total:
+                    done.set()
+                if (kill_host is not None and not killed[0]
+                        and delivered[0] >= total * kill_after_frac):
+                    killed[0] = True  # signal the controller, outside drains
+            time.sleep(service_s)  # simulated engine step (releases the GIL)
+
+    ts = [threading.Thread(target=work, args=(rid,))
+          for rid in range(num_replicas)]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    moved = 0
+    if kill_host is not None:
+        while not killed[0] and not done.is_set():
+            time.sleep(0.0005)
+        moved = fab.fail_host(kill_host)
+    done.wait(timeout=120)
+    wall = time.perf_counter() - t0
+    done.set()
+    for t in ts:
+        t.join(timeout=5)
+
+    survivors = [rid for rid in range(num_replicas)
+                 if fab.replicas[rid].alive]
+    # exactness: per class the replica streams merge to exactly 0..n-1,
+    # and every cycle-run (seq mod num_shards) is delivered in order
+    for name, n in per_class.items():
+        seqs = sorted(s for st in streams for c, s in st if c == name)
+        assert seqs == list(range(n)), (
+            f"{name}: lost/duplicated seats ({len(seqs)} of {n})")
+        for st in streams:
+            for shard in range(num_shards):
+                run = [s for c, s in st
+                       if c == name and s % num_shards == shard]
+                assert run == sorted(run), f"{name} run {shard} reordered"
+
+    tp = fab.stats()["transport"]
+    return {
+        "hosts": hosts,
+        "num_replicas": num_replicas,
+        "items": total,
+        "wall_s": wall,
+        "items_per_sec": total / max(wall, 1e-9),
+        "idle_frac": (sum(idle_time[rid] for rid in survivors)
+                      / max(len(survivors) * wall, 1e-9)),
+        "steals": sum(r.steals for r in fab.replicas),
+        "killed_host": kill_host,
+        "seats_recovered": moved,
+        "remote_msgs": tp["remote_msgs"],
+        "remote_bytes": tp["remote_bytes"],
+        "drops": tp["drops"],
+        "exact_order": True,
+    }
+
+
 def live_resize(*, items: int = 2400, num_shards: int = 4,
                 drain_k: int = 8, grow_to: int = 4, shrink_to: int = 2
                 ) -> Dict:

@@ -55,6 +55,15 @@ class FabricConfig:
     Scheduler half (always active):
       classes: the tenant/priority classes (at least one).
       replicas: scheduler/engine replicas to start with.
+      hosts: transport hosts the replicas spread over (round-robin,
+        ``rid % hosts``). 1 = single-host; >1 requires the sim transport.
+      transport: seat-protocol transport — local (in-process, zero-copy) |
+        sim (N simulated hosts, serialized wire envelopes, chaos knobs).
+      transport_drop / transport_delay / transport_reorder /
+      transport_seed: sim-transport chaos — message-drop and in-flight
+        delay probabilities, batch reordering, and the deterministic seed.
+        Order/exactness are transport-chaos-invariant (the seat cursor
+        drives delivery); only latency pays.
       max_replicas: live-resize ceiling — seats are provisioned per class at
         open (one shard per potential replica), so ``Fabric.resize(n)`` up
         to this count needs no re-shard. Defaults to ``replicas``.
@@ -87,6 +96,12 @@ class FabricConfig:
     replicas: int = 1
     max_replicas: Optional[int] = None
     shards_per_class: Optional[int] = None
+    hosts: int = 1
+    transport: str = "local"
+    transport_drop: float = 0.0
+    transport_delay: float = 0.0
+    transport_reorder: bool = False
+    transport_seed: int = 0
     policy: str = "strict"
     queue_window: int = 4096
     reclaim_period: int = 32
@@ -161,6 +176,29 @@ class FabricConfig:
                 f"{self.max_replicas}: every replica needs at least one "
                 f"seat per class — raise shards_per_class or lower "
                 f"max_replicas")
+        if self.transport not in ("local", "sim"):
+            bad(f"unknown transport {self.transport!r}; choose from "
+                f"['local', 'sim']")
+        if self.hosts < 1:
+            bad(f"hosts must be >= 1 (got {self.hosts})")
+        if self.transport == "local" and self.hosts != 1:
+            bad(f"hosts={self.hosts} with the local transport: the local "
+                f"transport is single-host by definition — set "
+                f"transport='sim' for multi-host layouts")
+        if self.hosts > self.max_replicas:
+            bad(f"hosts={self.hosts} > max_replicas={self.max_replicas}: "
+                f"a host with no replica drains nothing — raise "
+                f"max_replicas or lower hosts")
+        if self.transport == "local" and (
+                self.transport_drop or self.transport_delay
+                or self.transport_reorder):
+            bad("transport chaos knobs (transport_drop/delay/reorder) "
+                "require transport='sim': the local transport has no wire "
+                "to be lossy on")
+        for knob in ("transport_drop", "transport_delay"):
+            p = getattr(self, knob)
+            if not (0.0 <= p < 1.0):
+                bad(f"{knob} must be in [0, 1) (got {p})")
         for field, lo in (("queue_window", 1), ("reclaim_period", 1),
                           ("min_steal", 1), ("drain_k", 1),
                           ("checkpoint_window", 1)):

@@ -30,7 +30,7 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
 from repro.fabric.config import FabricConfig, FabricConfigError
-from repro.sched import QueueClass, ReplicaSet, Scheduler
+from repro.sched import QueueClass, ReplicaSet, Scheduler, make_transport
 
 
 def _build_classes(config: FabricConfig) -> List[QueueClass]:
@@ -41,6 +41,27 @@ def _build_classes(config: FabricConfig) -> List[QueueClass]:
                    window=config.queue_window,
                    reclaim_period=config.reclaim_period)
         for spec in config.classes]
+
+
+def _build_transport(config: FabricConfig, codec=None):
+    """Config -> seat-protocol transport. Serving fabrics carry Request
+    payloads, so the sim transport's wire codec gets the request
+    encode/decode hooks (the same pair the frontier checkpoint uses —
+    DESIGN.md §11: the checkpoint format is the wire format). Scheduler-
+    only fabrics default to the identity codec — cross-host envelopes take
+    a plain JSON hop, so payloads must be JSON-stable (a tuple comes back
+    a list); callers with richer payloads pass ``codec=(encode, decode)``
+    to Fabric.open/from_snapshot/restore."""
+    encode = decode = None
+    if codec is not None:
+        encode, decode = codec
+    elif config.arch is not None and config.transport == "sim":
+        from repro.serving.engine import request_from_state, request_state
+        encode, decode = request_state, request_from_state
+    return make_transport(
+        config.transport, config.hosts, drop=config.transport_drop,
+        reorder=config.transport_reorder, delay=config.transport_delay,
+        seed=config.transport_seed, encode=encode, decode=decode)
 
 
 class Fabric:
@@ -69,17 +90,20 @@ class Fabric:
     # ------------------------------------------------------------- lifecycle
     @classmethod
     def open(cls, config: FabricConfig, *, params=None,
-             model_cfg=None) -> "Fabric":
+             model_cfg=None, codec=None) -> "Fabric":
         """Stand up a fresh fabric from the declarative config. ``params`` /
         ``model_cfg`` are overrides for callers that already hold model
         state (tests, the compat shims); normally both derive from
-        ``config.arch`` (+ ``params_dir``)."""
+        ``config.arch`` (+ ``params_dir``). ``codec=(encode, decode)``
+        supplies the sim transport's payload wire hooks for scheduler-only
+        fabrics with non-JSON-stable payloads."""
         config.validate()
         classes = _build_classes(config)
+        transport = _build_transport(config, codec)
         if config.arch is None:
             sched = Scheduler(classes, policy=config.policy)
             rs = ReplicaSet(sched, config.replicas, policy=config.policy,
-                            min_steal=config.min_steal)
+                            min_steal=config.min_steal, transport=transport)
             return cls(config, replica_set=rs)
         model_cfg, params = cls._model_state(config, model_cfg, params)
         from repro.serving.engine import EngineReplicaGroup
@@ -88,22 +112,26 @@ class Fabric:
             max_batch=config.max_batch, page_size=config.page_size,
             num_pages=config.num_pages, window=config.kv_window,
             max_seq=config.max_seq, classes=classes, policy=config.policy,
-            min_steal=config.min_steal)
+            min_steal=config.min_steal, transport=transport)
         return cls(config, group=group, model_cfg=model_cfg, params=params)
 
     @classmethod
     def from_snapshot(cls, snapshot: dict, *, params=None, model_cfg=None,
                       checkpoint_dir: Optional[str] = None,
-                      overrides: Optional[dict] = None) -> "Fabric":
+                      overrides: Optional[dict] = None,
+                      codec=None) -> "Fabric":
         """Rebuild a fabric from a :meth:`snapshot` dict (JSON round-trip
         safe): the config rides inside it, every tenant resumes at its
         exact FIFO seat, and the replica count is whatever the snapshot
         recorded (resizes survive checkpoints).
 
         ``overrides`` replaces config fields that are safe to change across
-        a restore — policy, engine geometry/budgets, checkpoint cadence —
-        and is re-validated; class declarations and seat structure always
-        come from the snapshot (they ARE the resume state)."""
+        a restore — policy, engine geometry/budgets, checkpoint cadence,
+        and the transport/host layout (owners are recorded by replica and
+        re-addressed on restore, so a snapshot taken under LocalTransport
+        restores onto a multi-host SimHostTransport and vice versa) — and
+        is re-validated; class declarations and seat structure always come
+        from the snapshot (they ARE the resume state)."""
         config = FabricConfig.from_json(snapshot["config"])
         if overrides:
             for key in ("classes", "shards_per_class", "replicas"):
@@ -117,10 +145,12 @@ class Fabric:
                 and checkpoint_dir != config.checkpoint_dir:
             config = dataclasses.replace(config, checkpoint_dir=checkpoint_dir)
         step = int(snapshot.get("step", 0))
+        transport = _build_transport(config, codec)
         if config.arch is None:
             rs = ReplicaSet.from_state(snapshot["sched"],
                                        policy=config.policy,
-                                       min_steal=config.min_steal)
+                                       min_steal=config.min_steal,
+                                       transport=transport)
             return cls(config, replica_set=rs, step=step)
         model_cfg, params = cls._model_state(config, model_cfg, params)
         from repro.serving.engine import EngineReplicaGroup
@@ -128,14 +158,15 @@ class Fabric:
             model_cfg, params, snapshot["sched"], policy=config.policy,
             min_steal=config.min_steal, window=config.kv_window,
             max_batch=config.max_batch, page_size=config.page_size,
-            num_pages=config.num_pages, max_seq=config.max_seq)
+            num_pages=config.num_pages, max_seq=config.max_seq,
+            transport=transport)
         return cls(config, group=group, model_cfg=model_cfg, params=params,
                    step=step)
 
     @classmethod
     def restore(cls, checkpoint_dir: str, *, step: Optional[int] = None,
                 params=None, model_cfg=None,
-                overrides: Optional[dict] = None) -> "Fabric":
+                overrides: Optional[dict] = None, codec=None) -> "Fabric":
         """Resume from the latest (or a specific) cadence checkpoint in
         ``checkpoint_dir``: the snapshot carries its own config, so no
         re-declaration is needed (``overrides`` as in
@@ -150,7 +181,7 @@ class Fabric:
         return cls.from_snapshot(aux["fabric"], params=params,
                                  model_cfg=model_cfg,
                                  checkpoint_dir=checkpoint_dir,
-                                 overrides=overrides)
+                                 overrides=overrides, codec=codec)
 
     @staticmethod
     def _model_state(config: FabricConfig, model_cfg, params):
@@ -319,6 +350,22 @@ class Fabric:
             self._replica_set.resize(n)
         return self
 
+    def fail_host(self, host: int) -> int:
+        """Chaos/ops entry point: kill one simulated transport host mid-run
+        and recover its seats into the survivors (serving mode first
+        preempts the dead host's lanes to their exact seats). Per-class
+        FIFO delivery is preserved exactly — the dead host's final frontier
+        state replays through the wire codec. Returns the number of seats
+        reassigned."""
+        self._check_open()
+        if self._group is not None:
+            return self._group.fail_host(host)
+        return self._replica_set.fail_host(host)
+
+    @property
+    def transport(self):
+        return self._replica_set.transport
+
     # ------------------------------------------------------------ checkpoint
     def snapshot(self) -> dict:
         """JSON-able exact-seat frontier snapshot of the whole session:
@@ -375,7 +422,7 @@ class Fabric:
         out = {"step": self.step_count, "num_replicas": self.num_replicas,
                "resizes": self._replica_set.resizes,
                "classes": snap["classes"], "replicas": snap["replicas"],
-               "slo": slo}
+               "transport": snap["transport"], "slo": slo}
         if self._ckpt is not None:
             out["checkpoint"] = {"written": list(self._ckpt.written),
                                  "dropped": self._ckpt.dropped}

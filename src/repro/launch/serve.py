@@ -1,6 +1,7 @@
 """Serving driver: the whole system — class queues, scheduler replicas,
-engine group, checkpoint cadence — stood up through one declarative
-`FabricConfig` and driven through one `Fabric` session (DESIGN.md §10).
+engine group, transport, checkpoint cadence — stood up through one
+declarative `FabricConfig` and driven through one `Fabric` session
+(DESIGN.md §10-11).
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --requests 8 --max-new 8
@@ -13,6 +14,11 @@ engine group, checkpoint cadence — stood up through one declarative
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --multitenant --replicas 2 --checkpoint-dir /tmp/serve_ckpt \\
       --checkpoint-every 8
+
+  # 4 replicas over 2 simulated hosts (host-addressed seats, serialized
+  # wire envelopes), self-asserting delivery equality vs one host:
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
+      --replicas 4 --hosts 2 --verify-single-host
 """
 
 from __future__ import annotations
@@ -27,17 +33,84 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
     """Flags -> one validated FabricConfig. Conflicting combinations that
     the old hand-wired driver accepted silently (a cross-class --policy
     without --multitenant, a checkpoint cadence with nowhere to write,
-    --checkpoint-dir shadowing --ckpt-dir) raise FabricConfigError with the
-    fix spelled out."""
+    --checkpoint-dir shadowing --ckpt-dir, --hosts without enough replicas)
+    raise FabricConfigError with the fix spelled out."""
     from repro.fabric import ClassSpec, FabricConfig, tiered_classes
     classes = tiered_classes() if args.multitenant else (ClassSpec("default"),)
+    hosts = getattr(args, "hosts", 1)
     return FabricConfig(
         classes=classes, replicas=args.replicas, policy=args.policy,
+        hosts=hosts, transport="sim" if hosts > 1 else "local",
         arch=args.arch, smoke=args.smoke, params_dir=args.ckpt_dir,
         max_batch=args.max_batch, page_size=args.page_size,
         num_pages=args.num_pages, max_seq=256, kv_window=args.window,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every_n_steps=args.checkpoint_every)
+
+
+def run_workload(fab, args):
+    """Submit the flag-shaped request wave and drain it, recording the
+    *completion order* (the delivery-order signal --verify-single-host
+    compares across host layouts)."""
+    uids, tenant_of = [], {}
+    for i in range(args.requests):
+        plen = 3 + i % 5
+        prompt = [(7 * i + j) % (fab.model_cfg.vocab_size - 1) + 1
+                  for j in range(plen)]
+        qclass = TENANTS[i % 3] if args.multitenant else None
+        uid = fab.submit(prompt, max_new_tokens=args.max_new, qclass=qclass)
+        if uid is not None:
+            uids.append(uid)
+            tenant_of[uid] = qclass or "default"
+    order = []
+    for _ in range(2000):
+        order.extend(r.uid for r in fab.step())
+        if fab.idle():
+            break
+    done = dict(fab.completed)
+    return uids, tenant_of, done, order
+
+
+def verify_single_host(args, config) -> None:
+    """Run the identical workload under the multi-host layout and under one
+    host, and assert the runs are indistinguishable to every tenant: same
+    admitted requests, token-identical outputs, and the same per-class
+    completion order (the host split is a transparent implementation
+    detail of the seat protocol — exactly the tentpole claim)."""
+    import dataclasses
+    from repro.fabric import Fabric
+    # Throwaway self-test runs: never write (or resume) the user's real
+    # frontier checkpoints with the synthetic verify workload.
+    config = dataclasses.replace(config, checkpoint_dir=None,
+                                 checkpoint_every_n_steps=None)
+    runs = {}
+    for label, cfg in (("multi", config),
+                       ("single", dataclasses.replace(
+                           config, hosts=1, transport="local"))):
+        fab = Fabric.open(cfg)
+        uids, tenant_of, done, order = run_workload(fab, args)
+        runs[label] = (uids, tenant_of, done, order)
+        print(f"[serve] verify[{label}]: hosts={cfg.hosts} "
+              f"replicas={fab.num_replicas} completed={len(done)} "
+              f"transport={fab.stats()['transport']['kind']}")
+        fab.close(final_checkpoint=False)
+    (u_m, t_m, d_m, o_m), (u_s, t_s, d_s, o_s) = runs["multi"], runs["single"]
+    assert u_m == u_s, "admitted request sets diverged across host layouts"
+    assert set(d_m) == set(d_s), (
+        f"completion sets diverged: multi-only="
+    f"{sorted(set(d_m) - set(d_s))} single-only={sorted(set(d_s) - set(d_m))}")
+    for u in d_m:
+        assert d_m[u].output == d_s[u].output, (
+            f"req {u}: outputs diverged across host layouts")
+    for name in set(t_m.values()):
+        o_mc = [u for u in o_m if t_m[u] == name]
+        o_sc = [u for u in o_s if t_s[u] == name]
+        assert o_mc == o_sc, (
+            f"class {name}: completion order diverged "
+            f"(multi={o_mc}, single={o_sc})")
+    print(f"[serve] verify-single-host PASS: {len(d_m)} requests, "
+          f"per-class delivery order identical at hosts={config.hosts} "
+          f"vs hosts=1")
 
 
 def main() -> None:
@@ -61,6 +134,15 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=1,
                     help="N steal-rebalanced engine replicas (live-resized "
                          "to this count when resuming a checkpoint)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="spread the replicas over N simulated hosts "
+                         "(host-addressed seats over the sim transport; "
+                         "1 = in-process local transport)")
+    ap.add_argument("--verify-single-host", action="store_true",
+                    help="run the workload under --hosts N and under one "
+                         "host and assert identical per-class delivery "
+                         "order and token-identical outputs (self-test; "
+                         "skips checkpoint resume)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="frontier-checkpoint directory: resumes every "
                          "tenant at its exact FIFO seat if a snapshot "
@@ -69,23 +151,33 @@ def main() -> None:
                     help="also write a frontier snapshot every N engine "
                          "steps (bounded in-loop recovery point)")
     args = ap.parse_args()
+    if args.verify_single_host and args.hosts < 2:
+        ap.error("--verify-single-host compares a multi-host layout "
+                 "against one host; it needs --hosts >= 2 (with --hosts 1 "
+                 "both runs would be identical and the PASS vacuous)")
     from repro.fabric import Fabric, FabricConfigError
     try:
         config = config_from_args(args)
     except FabricConfigError as e:
         ap.error(str(e))
 
+    if args.verify_single_host:
+        verify_single_host(args, config)
+        return
+
     from repro.checkpoint.checkpointer import latest_step
     fab = None
     if args.checkpoint_dir and latest_step(args.checkpoint_dir) is not None:
         # The seat structure (classes/shards/replica count) comes from the
         # snapshot; knobs that rebuild fresh on restore keep following the
-        # flags, as the pre-fabric driver did.
+        # flags, as the pre-fabric driver did — including the transport and
+        # host layout (seat owners re-address by replica on restore).
         overrides = dict(policy=config.policy, kv_window=config.kv_window,
                          max_batch=config.max_batch,
                          page_size=config.page_size,
                          num_pages=config.num_pages,
                          max_seq=config.max_seq,
+                         hosts=config.hosts, transport=config.transport,
                          params_dir=config.params_dir,
                          checkpoint_every_n_steps=(
                              config.checkpoint_every_n_steps))
@@ -107,8 +199,9 @@ def main() -> None:
                 fab.close(final_checkpoint=False)
                 fab = None
         if fab is not None:
-            print(f"[serve] resumed {fab.num_replicas} replicas from "
-                  f"frontier checkpoint step {fab.step_count}: "
+            print(f"[serve] resumed {fab.num_replicas} replicas over "
+                  f"{fab.transport.num_hosts} host(s) from frontier "
+                  f"checkpoint step {fab.step_count}: "
                   f"{fab.pending()} seats pending")
             if fab.num_replicas != args.replicas:  # live reseat, no restart
                 try:
@@ -122,17 +215,7 @@ def main() -> None:
         fab = Fabric.open(config)
 
     t0 = time.time()
-    uids, tenant_of = [], {}
-    for i in range(args.requests):
-        plen = 3 + i % 5
-        prompt = [(7 * i + j) % (fab.model_cfg.vocab_size - 1) + 1
-                  for j in range(plen)]
-        qclass = TENANTS[i % 3] if args.multitenant else None
-        uid = fab.submit(prompt, max_new_tokens=args.max_new, qclass=qclass)
-        if uid is not None:
-            uids.append(uid)
-            tenant_of[uid] = qclass or "default"
-    done = fab.drain(max_steps=2000)
+    uids, tenant_of, done, _ = run_workload(fab, args)
     dt = time.time() - t0
     total_tokens = sum(len(done[u].output) for u in uids)
     for u in uids:
@@ -145,9 +228,16 @@ def main() -> None:
           f"({total_tokens/dt:.1f} tok/s); fabric steps={fab.step_count}; "
           f"free pages={free}/{total}")
     stats = fab.stats()
+    if args.hosts > 1:
+        ts = stats["transport"]
+        print(f"[serve] transport: hosts={ts['hosts']} "
+              f"remote_msgs={ts['remote_msgs']} "
+              f"remote_bytes={ts['remote_bytes']} "
+              f"remote_claims={ts['remote_claims']}")
     if args.replicas > 1:
         for rid, rs in stats["replicas"].items():
-            print(f"[serve] replica {rid}: steals={rs['steals']} "
+            print(f"[serve] replica {rid} (host {rs['host']}): "
+                  f"steals={rs['steals']} "
                   f"stolen_cycles={rs['stolen_cycles']} "
                   f"empty_drains={rs['empty_drains']}")
     if args.multitenant:

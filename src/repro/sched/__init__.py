@@ -9,8 +9,13 @@ queue fabric (DESIGN.md §8).
   - :mod:`repro.sched.steal`   — work stealing between shards (a steal is a
     claim; window safety is inherited from the protection domain).
   - :mod:`repro.sched.replica` — N scheduler replicas over one fabric
-    (DESIGN.md §9): seat ownership claimed by CAS, per-replica frontier
-    merges, exact-seat checkpoint/restore.
+    (DESIGN.md §9): host-addressed seat ownership claimed by CAS,
+    per-replica frontier merges, exact-seat checkpoint/restore, host-loss
+    recovery.
+  - :mod:`repro.sched.transport` — the pluggable seat-protocol transport
+    (DESIGN.md §11): `LocalTransport` (in-process, zero-copy) and
+    `SimHostTransport` (N simulated hosts, serialized wire envelopes,
+    injectable drop/delay/reorder chaos).
   - :mod:`repro.sched.stats`   — per-class occupancy/latency/steal telemetry
     sampled from domain state, zero added atomics.
 """
@@ -25,6 +30,9 @@ from repro.sched.stats import (ClassStats, LatencyWindow,
                                aggregate_class_snapshots)
 from repro.sched.steal import (ShardConsumer, claim_seat, queue_depth,
                                rebalance, steal_into)
+from repro.sched.transport import (HostAddr, LocalTransport,
+                                   SimHostTransport, Transport,
+                                   decode_owner, make_transport)
 
 __all__ = [
     "Envelope", "QueueClass", "Scheduler", "ShardSet", "shard_for",
@@ -32,4 +40,6 @@ __all__ = [
     "make_policy", "ClassStats", "LatencyWindow", "aggregate_class_snapshots",
     "ShardConsumer", "queue_depth", "rebalance", "steal_into", "claim_seat",
     "ClassView", "ReplicaSet", "SchedulerReplica", "ShardSeat",
+    "HostAddr", "LocalTransport", "SimHostTransport", "Transport",
+    "decode_owner", "make_transport",
 ]

@@ -51,6 +51,13 @@ class DrainPolicy:
         already advanced past them, exactly like a preempted lane)."""
         return []
 
+    def take_held(self) -> Drained:
+        """Remove and return the buffered heads — the destructive variant
+        used when a replica's local state is handed off (resize, host
+        failure): the heads ride to the new seat owners and must not stay
+        counted here."""
+        return []
+
 
 class StrictPriority(DrainPolicy):
     honors_priority = True
@@ -133,6 +140,11 @@ class ClassFifo(DrainPolicy):
 
     def held_items(self) -> Drained:
         return list(self._heads.values())
+
+    def take_held(self) -> Drained:
+        out = list(self._heads.values())
+        self._heads.clear()
+        return out
 
     def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
         out: Drained = []

@@ -55,19 +55,23 @@ def rebalance(shards: ShardSet, max_items: int = 8) -> int:
                       min(max_items, (depths[hi] - depths[lo]) // 2))
 
 
-def claim_seat(seat, thief_rid: int) -> bool:
-    """Replica-level steal (DESIGN.md §9): claim a whole shard cycle-run by
-    CASing the :class:`~repro.sched.replica.ShardSeat` owner cell. One CAS,
-    no victim participation — ownership of the run (its backlog *and* all
-    its future cycles, since placement is ``seq % S``) moves atomically.
-    The victim discovers the loss lazily and republishes anything it had
-    staged from that shard; the seat cursor, not queue position, keeps the
-    thief's delivery in exact run order. Returns False when the CAS lost a
-    race (or the thief already owns the seat) — retry next step."""
+def claim_seat(seat, thief) -> bool:
+    """Replica-level steal (DESIGN.md §9/§11): claim a whole shard
+    cycle-run by CASing the :class:`~repro.sched.replica.ShardSeat` owner
+    cell to the thief's host-addressed
+    :class:`~repro.sched.transport.HostAddr`. One CAS, no victim
+    participation — ownership of the run (its backlog *and* all its future
+    cycles, since placement is ``seq % S``) moves atomically; when the
+    victim lives on another host this is the body of the one claim RPC the
+    transport carries. The victim discovers the loss lazily and republishes
+    anything it had staged from that shard; the seat cursor, not queue
+    position, keeps the thief's delivery in exact run order. Returns False
+    when the CAS lost a race (or the thief already owns the seat) — retry
+    next step."""
     owner = seat.owner.load()
-    if owner == thief_rid:
+    if owner == thief:
         return False
-    return seat.owner.cas(owner, thief_rid)
+    return seat.owner.cas(owner, thief)
 
 
 class ShardConsumer:

@@ -351,6 +351,33 @@ def _split_budget(total: int, parts: int) -> List[int]:
     return [base + (1 if i < rem else 0) for i in range(parts)]
 
 
+def _split_budget_hosted(total: int, hosts: List[int],
+                         min_per: int = 1) -> List[int]:
+    """Host-aware budget partition: every replica is granted ``min_per``
+    first (an engine needs 1 lane, and 2 pages — the reserved scratch page
+    plus one live page — to serve at all), then the *remainder* splits
+    evenly across the hosts (a host's lanes and pages are physically its
+    own — DESIGN.md §11) and each host divides its share among its own
+    replicas. With one host this degenerates to :func:`_split_budget`
+    exactly; with replicas spread unevenly (e.g. 3 replicas on 2 hosts)
+    each host still gets an equal share of the surplus without ever
+    pushing a lone replica below the serving minimum."""
+    n = len(hosts)
+    assert total >= min_per * n, (
+        f"budget {total} cannot give {n} replicas {min_per} each")
+    out = [min_per] * n
+    rem = total - min_per * n
+    uniq = sorted(set(hosts))
+    base, extra = divmod(rem, len(uniq))
+    for j, h in enumerate(uniq):
+        share = base + (1 if j < extra else 0)
+        rids = [i for i, hh in enumerate(hosts) if hh == h]
+        b, e = divmod(share, len(rids))
+        for k, i in enumerate(rids):
+            out[i] += b + (1 if k < e else 0)
+    return out
+
+
 class EngineReplicaGroup:
     """N engine replicas over one class fabric (DESIGN.md §9).
 
@@ -375,7 +402,7 @@ class EngineReplicaGroup:
                  classes: Optional[Sequence[QueueClass]] = None,
                  policy="strict", min_steal: int = 1,
                  replica_set: Optional[ReplicaSet] = None,
-                 forward_fn=None, uid_start: int = 0):
+                 forward_fn=None, uid_start: int = 0, transport=None):
         if replica_set is None:
             if classes is None:
                 classes = [QueueClass("default", num_shards=num_replicas,
@@ -383,7 +410,8 @@ class EngineReplicaGroup:
                                       reclaim_period=32)]
             replica_set = ReplicaSet(Scheduler(classes, policy=policy),
                                      num_replicas, policy=policy,
-                                     min_steal=min_steal)
+                                     min_steal=min_steal,
+                                     transport=transport)
         self.replica_set = replica_set
         self.sched = replica_set.scheduler
         self.num_replicas = replica_set.num_replicas
@@ -401,17 +429,25 @@ class EngineReplicaGroup:
         self.step_count = 0
 
     def _build_engines(self) -> List[Engine]:
-        """One engine per scheduler replica, the fabric-wide lane and page
-        budgets partitioned across them, all sharing one compiled forward."""
-        lanes = _split_budget(self._budget["max_batch"], self.num_replicas)
-        pages = _split_budget(self._budget["num_pages"], self.num_replicas)
+        """One engine per *live* scheduler replica, the fabric-wide lane
+        and page budgets partitioned host-first across them (each live
+        transport host gets an equal hardware share, split among its
+        replicas — a dead host's replicas get no engine and no budget),
+        all sharing one compiled forward."""
+        live = self.replica_set.live_replicas()
+        assert live, "engine group with every host dead"
+        hosts = [r.addr.host for r in live]
+        lanes = _split_budget_hosted(self._budget["max_batch"], hosts,
+                                     min_per=1)
+        pages = _split_budget_hosted(self._budget["num_pages"], hosts,
+                                     min_per=2)
         return [
-            Engine(self.cfg, self.params, max_batch=lanes[r],
-                   page_size=self._budget["page_size"], num_pages=pages[r],
+            Engine(self.cfg, self.params, max_batch=lanes[i],
+                   page_size=self._budget["page_size"], num_pages=pages[i],
                    window=self._budget["window"],
                    max_seq=self._budget["max_seq"],
-                   sched=self.replica_set.replicas[r], forward_fn=self._fwd)
-            for r in range(self.num_replicas)]
+                   sched=r, forward_fn=self._fwd)
+            for i, r in enumerate(live)]
 
     # ---------------------------------------------------------------- client
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -437,12 +473,15 @@ class EngineReplicaGroup:
 
     # ---------------------------------------------------------------- step
     def step(self) -> List[Request]:
-        """One group iteration: every replica runs its own admit/decode
-        step, then one steal pass rebalances starved replicas."""
+        """One group iteration: every live replica runs its own
+        admit/decode step, then one steal pass rebalances starved
+        replicas (dead hosts' engines are skipped — their lanes were
+        evicted to exact seats by :meth:`fail_host`)."""
         self.step_count += 1
         done: List[Request] = []
         for eng in self.engines:
-            done.extend(eng.step())
+            if eng.sched.alive:
+                done.extend(eng.step())
         self.replica_set.rebalance()
         return done
 
@@ -498,6 +537,27 @@ class EngineReplicaGroup:
         self.engines = self._build_engines()
         return self
 
+    def fail_host(self, host: int) -> int:
+        """Kill one transport host mid-run: every lane on the dead host's
+        engines is preempted to its exact class-cycle seat (the preemption
+        contract — KV pages die with the host, the request re-prefills on
+        its next admission), completed requests are carried, and the
+        scheduler fabric replays the host's frontier state into the
+        survivors (:meth:`~repro.sched.ReplicaSet.fail_host`). Returns the
+        number of seats reassigned."""
+        for eng in self.engines:
+            if eng.sched.addr.host != host or not eng.sched.alive:
+                continue
+            for lane, req in enumerate(eng.active):
+                if req is not None:
+                    eng._evict_lane(lane)  # exact-seat requeue
+            self._completed.update(eng.completed)
+        moved = self.replica_set.fail_host(host)
+        # drop the dead engines: their KV pools die with the host and
+        # step()/idle()/completed stop scanning them
+        self.engines = [e for e in self.engines if e.sched.alive]
+        return moved
+
     # ------------------------------------------------------------ checkpoint
     def sched_state(self) -> dict:
         """Exact-seat frontier snapshot of the serving fabric, taken
@@ -522,16 +582,17 @@ class EngineReplicaGroup:
     @classmethod
     def from_sched_state(cls, cfg: ModelConfig, params, state: dict, *,
                          policy="strict", min_steal: int = 1,
-                         forward_fn=None, window: int = 4, **engine_kw
-                         ) -> "EngineReplicaGroup":
+                         forward_fn=None, window: int = 4, transport=None,
+                         **engine_kw) -> "EngineReplicaGroup":
         """Restore a replica group from :meth:`sched_state`: every tenant
-        resumes at its exact FIFO seat (in-flight requests re-prefill).
-        Each class's shard CMPQueue configuration is restored from the
-        snapshot itself; ``window`` here is only the KV pools' protection
-        window."""
+        resumes at its exact FIFO seat (in-flight requests re-prefill),
+        under whatever transport/host layout the restoring caller runs
+        (seat owners re-address by replica). Each class's shard CMPQueue
+        configuration is restored from the snapshot itself; ``window``
+        here is only the KV pools' protection window."""
         rs = ReplicaSet.from_state(
             state, decode=request_from_state, policy=policy,
-            min_steal=min_steal)
+            min_steal=min_steal, transport=transport)
         return cls(cfg, params, replica_set=rs, forward_fn=forward_fn,
                    window=window, uid_start=state.get("next_uid", 0),
                    **engine_kw)

@@ -261,6 +261,43 @@ def test_restore_accepts_safe_overrides_and_rejects_structural():
         Fabric.from_snapshot(snap, overrides={"policy": "nope"})
 
 
+def test_restore_from_dir_structural_vs_policy_overrides(tmp_path):
+    """ISSUE satellite: Fabric.restore refuses structural overrides
+    (shards_per_class, the class set, replicas) but accepts policy/cadence
+    — and a snapshot written under LocalTransport restores under
+    SimHostTransport (the transport/host layout is a safe override)."""
+    ck = str(tmp_path / "frontier")
+    fab = Fabric.open(_two_class_config(replicas=2, checkpoint_dir=ck))
+    for name in ("hi", "lo"):
+        fab.submit_many([(name, i) for i in range(50)], qclass=name)
+    prefix = [(v.name, e.seq) for v, e in fab.step()]
+    fab.checkpoint()
+    del fab  # crash: the checkpoint is the recovery truth
+
+    for bad in ({"shards_per_class": 8}, {"replicas": 4},
+                {"classes": (ClassSpec("other"),)}):
+        with pytest.raises(FabricConfigError, match="seat structure"):
+            Fabric.restore(ck, overrides=bad)
+    with pytest.raises(FabricConfigError, match="single-host"):
+        Fabric.restore(ck, overrides={"hosts": 2})  # needs the sim transport
+
+    fab2 = Fabric.restore(ck, overrides={
+        "transport": "sim", "hosts": 2, "policy": "wfq", "drain_k": 4,
+        "transport_seed": 3, "checkpoint_every_n_steps": 7})
+    assert fab2.transport.kind == "sim" and fab2.transport.num_hosts == 2
+    assert fab2.config.policy == "wfq"
+    assert fab2.config.checkpoint_every_n_steps == 7
+    assert fab2.config.shards_per_class == 4  # structure from the snapshot
+    streams = {"hi": [s for n, s in prefix if n == "hi"],
+               "lo": [s for n, s in prefix if n == "lo"]}
+    for v, e in fab2.drain():
+        streams[v.name].append(e.seq)
+    for name in ("hi", "lo"):
+        assert sorted(streams[name]) == list(range(50)), \
+            f"{name}: seats lost restoring local->sim"
+    fab2.close()
+
+
 def test_stats_slo_view():
     cfg = FabricConfig(
         classes=(ClassSpec("fast", priority=1, slo_ms=1e7),
@@ -406,6 +443,27 @@ def test_serving_fabric_resize_under_load(model):
     done = fab.drain(max_steps=300)
     assert set(done) >= set(uids), "request lost across resize"
     assert len(done) == len(set(done)), "request served twice"
+    fab.close()
+
+
+def test_serving_fabric_multihost_host_loss(model):
+    """Serving over 2 simulated hosts: kill one mid-wave — its lanes
+    preempt to exact seats, its engines stop, survivors steal the seats —
+    and every request is still served exactly once."""
+    mcfg, params = model
+    fab = Fabric.open(
+        _serving_config(replicas=2, transport="sim", hosts=2),
+        params=params, model_cfg=mcfg)
+    uids = fab.submit_many([[i + 1, 2] for i in range(6)],
+                           max_new_tokens=3, qclass="hi")
+    fab.step()
+    moved = fab.fail_host(1)
+    assert moved > 0
+    assert not fab.replicas[1].alive
+    done = fab.drain(max_steps=300)
+    assert set(done) >= set(uids), "request lost across host failure"
+    assert len(done) == len(set(done)), "request served twice"
+    assert fab.stats()["transport"]["dead_hosts"] == [1]
     fab.close()
 
 

@@ -327,8 +327,8 @@ def test_replica_steal_is_one_cas_and_keeps_run_order():
         for shard in range(4):  # within every stolen run: exact order
             run = [s for s in seqs if s % 4 == shard]
             assert run == sorted(run)
-    # all seats ended under the only live replica
-    assert all(seat.owner.load() == 0
+    # all seats ended under the only live replica (host-addressed owners)
+    assert all(seat.owner.load().rid == 0
                for seats in rs.seats.values() for seat in seats)
 
 

@@ -1,0 +1,392 @@
+"""The seat-protocol transport layer (DESIGN.md §11): host-addressed
+ownership, the wire codec (= the frontier checkpoint format), LocalTransport
+/ SimHostTransport equivalence, chaos (drop/delay/reorder) invariance,
+host-loss recovery, and cross-transport snapshot restore."""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.fabric import ClassSpec, Fabric, FabricConfig, FabricConfigError
+from repro.sched import (HostAddr, QueueClass, ReplicaSet, Scheduler,
+                         SchedulerReplica, ShardSeat, SimHostTransport,
+                         decode_owner, make_transport)
+from repro.sched.classes import Envelope
+from repro.sched.transport import wire_decode, wire_encode
+
+# ---------------------------------------------------------------------------
+# addressing + wire codec
+# ---------------------------------------------------------------------------
+
+
+def test_host_addr_json_roundtrip_and_legacy_decode():
+    a = HostAddr(1, 5)
+    assert decode_owner(json.loads(json.dumps(list(a)))) == (1, 5)
+    # PR-3/4 snapshots recorded a bare replica index (single-host)
+    assert decode_owner(3) == (0, 3)
+
+
+def test_wire_codec_is_the_checkpoint_format():
+    envs = [Envelope(3, 7, time.monotonic(), {"k": [1, 2]}),
+            Envelope(1, 5, time.monotonic(), "x")]
+    blob = wire_encode(envs)
+    # the wire records ARE encode_envelopes' checkpoint records
+    assert json.loads(blob) == [[1, 5, "x"], [3, 7, {"k": [1, 2]}]]
+    stamps = [e.t_submit for e in sorted(envs)]
+    back = wire_decode(blob, t_submit=stamps)
+    assert [(e.seq, e.stamp, e.payload) for e in back] == \
+        [(1, 5, "x"), (3, 7, {"k": [1, 2]})]
+    assert [e.t_submit for e in back] == stamps  # latency telemetry honest
+
+
+def test_make_transport_validation():
+    assert make_transport("local").kind == "local"
+    assert make_transport("sim", 3).num_hosts == 3
+    with pytest.raises(ValueError, match="unknown transport"):
+        make_transport("tcp")
+    with pytest.raises(AssertionError):
+        SimHostTransport(2, drop=1.0)
+
+
+def test_config_validates_transport_fields():
+    with pytest.raises(FabricConfigError, match="single-host"):
+        FabricConfig(hosts=2)  # local transport can't be multi-host
+    with pytest.raises(FabricConfigError, match="no wire"):
+        FabricConfig(transport_drop=0.1)
+    with pytest.raises(FabricConfigError, match="drains nothing"):
+        FabricConfig(transport="sim", hosts=4, replicas=2, max_replicas=2,
+                     shards_per_class=4)
+    with pytest.raises(FabricConfigError, match="transport_drop"):
+        FabricConfig(transport="sim", hosts=1, transport_drop=2.0)
+    cfg = FabricConfig(transport="sim", hosts=2, replicas=2,
+                       shards_per_class=2)
+    assert json.loads(json.dumps(cfg.to_json()))["hosts"] == 2
+    assert FabricConfig.from_json(cfg.to_json()) == cfg
+
+
+# ---------------------------------------------------------------------------
+# sched-only fabrics over the sim transport
+# ---------------------------------------------------------------------------
+
+
+def _fab(**kw):
+    base = dict(classes=(ClassSpec("hi", priority=1, weight=4.0),
+                         ClassSpec("lo", priority=0, weight=1.0)),
+                shards_per_class=4, replicas=4, max_replicas=4,
+                queue_window=4096, drain_k=6)
+    base.update(kw)
+    return Fabric.open(FabricConfig(**base))
+
+
+def _wave(fab, per_class):
+    for name in ("hi", "lo"):
+        fab.submit_many([(name, i) for i in range(per_class)], qclass=name)
+
+
+def _drain_streams(fab, per_class, max_rounds=50000):
+    streams = {"hi": [], "lo": []}
+    rounds = 0
+    while sum(map(len, streams.values())) < 2 * per_class:
+        rounds += 1
+        assert rounds < max_rounds, "fabric did not drain"
+        for v, env in fab.step():
+            streams[v.name].append(env.seq)
+    return streams
+
+
+def _assert_exact(streams, per_class, shards=4):
+    """The PR-3/4 exact-seat acceptance: per class the union is exactly
+    0..n-1 and every shard cycle-run is delivered in order."""
+    for name, seqs in streams.items():
+        assert sorted(seqs) == list(range(per_class)), \
+            f"{name}: lost/duplicated seats ({len(seqs)} of {per_class})"
+        for s in range(shards):
+            run = [q for q in seqs if q % shards == s]
+            assert run == sorted(run), f"{name} run {s} reordered"
+
+
+def test_sim_lossless_delivers_identically_to_local():
+    """With a clean wire, the host split is invisible: same per-class
+    delivery streams as the local transport, envelope for envelope."""
+    per_class = 120
+    fab_l = _fab()
+    _wave(fab_l, per_class)
+    local = _drain_streams(fab_l, per_class)
+    fab_s = _fab(transport="sim", hosts=2)
+    _wave(fab_s, per_class)
+    sim = _drain_streams(fab_s, per_class)
+    assert sim == local
+    _assert_exact(sim, per_class)
+
+
+def test_sim_chaos_preserves_exact_order():
+    """Message drop + delay + batch reorder cost latency, never exactness:
+    the seat cursor, not arrival order, drives delivery."""
+    per_class = 150
+    fab = _fab(transport="sim", hosts=2, replicas=3,
+               transport_drop=0.3, transport_delay=0.2,
+               transport_reorder=True, transport_seed=17)
+    _wave(fab, per_class)
+    streams = _drain_streams(fab, per_class)
+    _assert_exact(streams, per_class)
+    ts = fab.stats()["transport"]
+    assert ts["drops"] > 0 and ts["delayed"] > 0 and ts["reordered"] > 0
+    assert ts["remote_bytes"] > 0  # the cross-host hops were serialized
+
+
+def test_schedonly_codec_hooks_preserve_payload_types():
+    """Scheduler-only fabrics default to a plain JSON wire (tuples come
+    back lists on cross-host hops); Fabric.open(codec=...) supplies the
+    payload encode/decode pair and types survive every hop."""
+    per_class = 120
+    cfg = FabricConfig(
+        classes=(ClassSpec("hi", priority=1), ClassSpec("lo")),
+        shards_per_class=4, replicas=3, max_replicas=3, queue_window=4096,
+        drain_k=6, transport="sim", hosts=2)
+    fab = Fabric.open(cfg, codec=(list, tuple))
+    _wave(fab, per_class)
+    payloads = []
+    rounds = 0
+    while len(payloads) < 2 * per_class:
+        rounds += 1
+        assert rounds < 50000
+        payloads.extend(env.payload for _, env in fab.step())
+    assert all(isinstance(p, tuple) for p in payloads), \
+        "payload type lost on a cross-host hop"
+    assert fab.stats()["transport"]["remote_msgs"] > 0
+
+
+def test_steal_is_one_claim_rpc_through_the_transport():
+    """A cross-host steal is exactly one ownership-claim message; a dropped
+    claim is retried next round and the run is never lost."""
+    classes = [QueueClass("a", num_shards=4, window=1024)]
+    sched = Scheduler(classes)
+    tp = SimHostTransport(2, drop=0.5, seed=3)
+    rs = ReplicaSet(sched, 2, min_steal=1, transport=tp)
+    for i in range(40):
+        sched.submit("a", i)
+    thief = rs.replicas[0]
+    got = []
+    rounds = 0
+    while len(got) < 40:  # replica 1 stalled: thief must claim its runs
+        rounds += 1
+        assert rounds < 50000
+        batch = thief.drain(8)
+        if not batch:
+            thief.steal_if_starved()
+            continue
+        got.extend(env.seq for _, env in batch)
+    assert sorted(got) == list(range(40))
+    assert thief.steals > 0
+    assert tp.remote_claims > 0  # the steals crossed hosts as claim RPCs
+
+
+def test_fail_host_recovers_staged_and_requeued_seats():
+    """Kill a host whose replicas hold staged claims, requeued seats and
+    policy-held heads: the survivors replay its frontier state through the
+    wire codec and delivery stays exact — nothing lost, nothing twice."""
+    per_class = 80
+    fab = _fab(transport="sim", hosts=2, policy="fifo", drain_k=1)
+    _wave(fab, per_class)
+    streams = {"hi": [], "lo": []}
+    for _ in range(6):  # partial drains: fifo heads held, stages populated
+        for v, env in fab.step():
+            streams[v.name].append(env.seq)
+    # manufacture a requeued seat on a host-1 replica (odd rids live there)
+    victim = fab.replicas[1]
+    view = victim.by_name["hi"]
+    if streams["hi"]:
+        seq = streams["hi"].pop()
+        view.requeue(Envelope(seq, 0, time.monotonic(), ("hi", seq)))
+    moved = fab.fail_host(1)
+    assert moved > 0
+    assert not fab.replicas[1].alive and not fab.replicas[3].alive
+    # recovery spreads the dead host's seats across DISTINCT survivors
+    # (one shared round-robin cycle, not one hoarder per class)
+    new_owners = {seat.owner.load().rid
+                  for seats in fab.replica_set.seats.values()
+                  for seat in seats}
+    assert new_owners == {0, 2}, f"recovery concentrated seats: {new_owners}"
+    stall = 0
+    while fab.pending() > 0 and stall < 10000:
+        got = fab.step()
+        for v, env in got:
+            streams[v.name].append(env.seq)
+        stall = 0 if got else stall + 1
+    merged = streams
+    for n in ("hi", "lo"):
+        assert sorted(merged[n]) == list(range(per_class)), f"{n}: lost seats"
+    with pytest.raises(AssertionError, match="last live host"):
+        fab.fail_host(0)
+
+
+def test_snapshot_roundtrips_across_transports():
+    """ISSUE satellite: a frontier snapshot written under LocalTransport
+    restores under SimHostTransport (and back) — owners re-address by
+    replica, delivery continues at the exact seats."""
+    per_class = 60
+    fab = _fab()
+    _wave(fab, per_class)
+    prefix = [(v.name, e.seq) for v, e in fab.step()]
+    snap = json.loads(json.dumps(fab.snapshot()))
+    assert snap["sched"]["transport"]["kind"] == "local"
+
+    fab2 = Fabric.from_snapshot(snap, overrides={"transport": "sim",
+                                                 "hosts": 2})
+    assert fab2.transport.kind == "sim" and fab2.transport.num_hosts == 2
+    hosts = {seat.owner.load().host
+             for seats in fab2.replica_set.seats.values() for seat in seats}
+    assert hosts == {0, 1}  # owners really landed on both hosts
+    streams = {"hi": [s for n, s in prefix if n == "hi"],
+               "lo": [s for n, s in prefix if n == "lo"]}
+    for v, e in fab2.drain():
+        streams[v.name].append(e.seq)
+    _assert_exact(streams, per_class)
+
+    # and back: sim snapshot -> local restore
+    fab3 = _fab(transport="sim", hosts=2)
+    _wave(fab3, per_class)
+    fab3.step()
+    snap3 = json.loads(json.dumps(fab3.snapshot()))
+    fab4 = Fabric.from_snapshot(snap3, overrides={"transport": "local",
+                                                  "hosts": 1})
+    assert fab4.transport.kind == "local"
+    assert fab4.pending() > 0
+    fab4.drain()
+    assert fab4.pending() == 0
+
+
+def test_legacy_int_owner_snapshot_restores():
+    """A PR-3/4 frontier snapshot (bare-int seat owners) restores under the
+    host-addressed fabric."""
+    fab = _fab()
+    _wave(fab, 40)
+    snap = json.loads(json.dumps(fab.snapshot()))
+    for cs in snap["sched"]["classes"].values():
+        cs["owners"] = [rid for _, rid in cs["owners"]]  # legacy format
+    del snap["sched"]["transport"]
+    fab2 = Fabric.from_snapshot(snap)
+    streams = {"hi": [], "lo": []}
+    for v, e in fab2.drain():
+        streams[v.name].append(e.seq)
+    _assert_exact(streams, 40)
+
+
+def test_standalone_scheduler_replica_default_transport():
+    """SchedulerReplica constructed outside a ReplicaSet (exported API)
+    gets a bound LocalTransport and drains."""
+    sched = Scheduler([QueueClass("a", num_shards=2, window=256)])
+    seats = {"a": [ShardSeat(HostAddr(0, 0), s) for s in range(2)]}
+    r = SchedulerReplica(0, sched, seats)
+    sched.submit("a", "x")
+    assert [e.payload for _, e in r.drain(4)] == ["x"]
+
+
+def test_hosted_budget_split_honors_serving_minimums():
+    """The host-first budget split never pushes a replica below the
+    serving minimum (1 lane; 2 pages = scratch + one live), even when
+    replicas spread unevenly over hosts."""
+    from repro.serving.engine import _split_budget, _split_budget_hosted
+    # the case that used to yield [2, 3, 1]: a one-page engine can't serve
+    assert _split_budget_hosted(6, [0, 1, 0], min_per=2) == [2, 2, 2]
+    assert all(b >= 2 for b in _split_budget_hosted(7, [0, 1, 0],
+                                                    min_per=2))
+    # single host degenerates to the flat split
+    assert _split_budget_hosted(5, [0, 0, 0]) == _split_budget(5, 3)
+    assert _split_budget_hosted(64, [0, 0]) == _split_budget(64, 2)
+    # even spread: equal hardware share per host
+    assert _split_budget_hosted(64, [0, 1, 0, 1], min_per=2) == \
+        [16, 16, 16, 16]
+    assert sum(_split_budget_hosted(33, [0, 1, 0], min_per=2)) == 33
+
+
+def test_resize_respects_hosts():
+    """Fabric.resize over a sim transport re-splits seats across the host
+    layout: every live host keeps one seat share per class."""
+    fab = _fab(transport="sim", hosts=2, replicas=2)
+    _wave(fab, 60)
+    fab.resize(4)
+    owners = {seat.owner.load()
+              for seats in fab.replica_set.seats.values() for seat in seats}
+    assert owners == {HostAddr(0, 0), HostAddr(1, 1),
+                      HostAddr(0, 2), HostAddr(1, 3)}
+    streams = _drain_streams(fab, 60)
+    _assert_exact(streams, 60)
+
+
+@pytest.mark.slow
+def test_chaos_host_loss_matches_uninterrupted_single_host_run():
+    """ISSUE acceptance: SimHostTransport(drop=0.05, reorder=True), kill
+    one simulated host mid-run under concurrent producers and drain
+    threads; per-class delivery order is identical to an uninterrupted
+    single-host run — the exact-seat acceptance (union exact, every
+    cycle-run in order), PR-3/4 assertion style."""
+    per_class, shards = 300, 4
+
+    def run(chaos: bool):
+        kw = dict(transport="sim", hosts=2, replicas=4,
+                  transport_drop=0.05, transport_reorder=True,
+                  transport_seed=5) if chaos else {}
+        fab = _fab(**kw)
+        stop = threading.Event()
+
+        def produce(name):
+            for i in range(per_class):
+                fab.submit((name, i), qclass=name)
+                if i % 97 == 0:
+                    time.sleep(0)
+
+        producers = [threading.Thread(target=produce, args=(n,))
+                     for n in ("hi", "lo")]
+        streams = {"hi": [], "lo": []}
+        lock = threading.Lock()
+
+        def drainer(rid):
+            r = fab.replicas[rid]
+            while not stop.is_set():
+                got = r.drain(6)
+                if not got:
+                    r.steal_if_starved()
+                    time.sleep(0)
+                    continue
+                with lock:
+                    for v, env in got:
+                        streams[v.name].append(env.seq)
+
+        drainers = [threading.Thread(target=drainer, args=(rid,))
+                    for rid in range(4)]
+        for t in producers + drainers:
+            t.start()
+        if chaos:
+            while True:
+                with lock:
+                    if sum(map(len, streams.values())) >= per_class // 2:
+                        break
+                time.sleep(0.001)
+            fab.fail_host(1)  # mid-run host loss; drainers 1/3 go idle
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            with lock:
+                if sum(map(len, streams.values())) >= 2 * per_class:
+                    break
+            time.sleep(0.005)
+        stop.set()
+        for t in producers + drainers:
+            t.join(timeout=10)
+        return streams
+
+    base = run(chaos=False)
+    chaotic = run(chaos=True)
+    _assert_exact(base, per_class, shards)
+    _assert_exact(chaotic, per_class, shards)
+    # identical per-class delivery *order* within every cycle-run: both
+    # runs deliver each run in dense cycle order, so the per-run streams
+    # must be equal, not merely sorted
+    for name in ("hi", "lo"):
+        for s in range(shards):
+            run_c = [q for q in chaotic[name] if q % shards == s]
+            run_b = [q for q in base[name] if q % shards == s]
+            assert run_c == run_b, \
+                f"{name} run {s}: chaos delivery diverged from base"
