@@ -1,0 +1,56 @@
+"""Admission-path microbenchmark: host policy drain vs the device-resident
+CMP ring (DESIGN.md §12).
+
+Measures scheduler-to-lanes admission throughput without the model forward
+(which would drown the admission delta): the host path is the engine's
+per-step ``sched.drain(k)`` loop; the device path mirrors
+``Engine._drain_admission`` exactly — O(1) bulk drain into the ring, then
+one fused reclaim+enqueue+claim+publish invocation per step.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.sched import QueueClass, Scheduler
+from repro.serving.admission import DeviceAdmissionRing
+
+
+def admission_throughput(device: bool, items: int = 16000, k: int = 64,
+                         claim_block: int = 1024) -> Dict:
+    """items/sec draining one pre-filled class through ``k``-lane admission
+    steps, via the host policy drain (``device=False``) or the device ring
+    (``device=True``, platform-picked kernel: Pallas on TPU, the jit'd
+    oracle elsewhere) with ``claim_block`` lanes of claim look-ahead per
+    fused invocation."""
+    sched = Scheduler([QueueClass("default", window=2 * items,
+                                  reclaim_period=64)])
+    sched.submit_many("default", list(range(items)))
+    ring = (DeviceAdmissionRing(k=k, claim_block=claim_block)
+            if device else None)
+    if ring is not None:
+        # warm the jit cache outside the timed region (same shapes/statics)
+        warm = DeviceAdmissionRing(k=k, claim_block=claim_block)
+        warm.step([("warm", 0)], 1)
+    got = 0
+    t0 = time.perf_counter()
+    while got < items:
+        if ring is None:
+            batch = sched.drain(k)
+        else:
+            fresh = []
+            if ring.buffered < k:  # fused invocation imminent: top up
+                need = 2 * ring.claim_block - ring.pending
+                if need > 0:
+                    fresh = sched.drain_bulk(min(need, ring.room))
+            batch, rejected = ring.step(fresh, k)
+            for qc, env in rejected:
+                qc.requeue(env)
+        assert batch or (ring is not None and ring.pending), \
+            "admission stalled with items still queued"
+        got += len(batch)
+    dt = time.perf_counter() - t0
+    return {"device": device, "k": k,
+            "claim_block": claim_block if device else None, "items": items,
+            "items_per_sec": items / dt, "seconds": dt}

@@ -35,6 +35,17 @@ GATES = [
     ("cmp.batched.rmw_per_deq", "higher", 1.0),
     ("cmp.scalar.atomics_per_enq", "higher", 1.0),
     ("cmp.scalar.atomics_per_deq", "higher", 1.0),
+    # ISSUE 6 tentpole: the vectorized host fast path (one striped-lock
+    # acquisition per batch) and the device admission ring. The amortized
+    # atomics-per-op are counted (deterministic, base tolerance); the
+    # throughputs are wall-clock (2x tolerance, best-of-currents). The
+    # admission speedup is a ratio of two same-machine runs, so runner
+    # speed cancels — it gates at 2x tolerance against noise asymmetry.
+    ("cmp.vectorized.items_per_sec", "lower", 2.0),
+    ("cmp.vectorized.atomics_per_enq", "higher", 1.0),
+    ("cmp.vectorized.atomics_per_deq", "higher", 1.0),
+    ("engine.device_admission.device_items_per_sec", "lower", 2.0),
+    ("engine.device_admission.speedup", "lower", 2.0),
     # Live-resize reseat latency (the PR 4 elasticity win, refreshed by
     # every --quick run). Unlike the counted atomics, this is an absolute
     # sub-millisecond wall-clock number measured on whatever machine runs

@@ -153,7 +153,8 @@ def batched_atomic_op_run(kind: str, ops: int = 2000, batch: int = 32) -> Dict:
         _enqueue_chunk(q, list(range(s, s + batch)))
     enq_counts = op_counts()
     enq = sum(enq_counts.values()) / ops
-    enq_rmw = (enq_counts.get("cas", 0) + enq_counts.get("faa", 0)) / ops
+    enq_rmw = (enq_counts.get("cas", 0) + enq_counts.get("faa", 0)
+               + enq_counts.get("max", 0)) / ops
     reset_op_counts()
     got = 0
     while got < ops:
@@ -163,7 +164,8 @@ def batched_atomic_op_run(kind: str, ops: int = 2000, batch: int = 32) -> Dict:
         got += len(chunk)
     deq_counts = op_counts()
     deq = sum(deq_counts.values()) / max(1, got)
-    deq_rmw = (deq_counts.get("cas", 0) + deq_counts.get("faa", 0)) / max(1, got)
+    deq_rmw = (deq_counts.get("cas", 0) + deq_counts.get("faa", 0)
+               + deq_counts.get("max", 0)) / max(1, got)
     return {"kind": kind, "batch": batch, "native_batched": native,
             "atomics_per_enq": enq, "atomics_per_deq": deq,
             "rmw_per_enq": enq_rmw, "rmw_per_deq": deq_rmw}
@@ -205,13 +207,15 @@ def atomic_op_run(kind: str, ops: int = 2000) -> Dict:
     enq = sum(enq_counts.values()) / ops
     # "algorithm atomics" in the paper's sense: CAS + fetch-and-add + shared
     # loads on the queue structure, excluding pool internals & plain stores
-    enq_rmw = (enq_counts.get("cas", 0) + enq_counts.get("faa", 0)) / ops
+    enq_rmw = (enq_counts.get("cas", 0) + enq_counts.get("faa", 0)
+               + enq_counts.get("max", 0)) / ops
     reset_op_counts()
     for _ in range(ops):
         q.dequeue()
     deq_counts = op_counts()
     deq = sum(deq_counts.values()) / ops
-    deq_rmw = (deq_counts.get("cas", 0) + deq_counts.get("faa", 0)) / ops
+    deq_rmw = (deq_counts.get("cas", 0) + deq_counts.get("faa", 0)
+               + deq_counts.get("max", 0)) / ops
     return {"kind": kind, "atomics_per_enq": enq, "atomics_per_deq": deq,
             "rmw_per_enq": enq_rmw, "rmw_per_deq": deq_rmw,
             "enq_breakdown": {k: v / ops for k, v in enq_counts.items()},

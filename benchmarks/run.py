@@ -26,6 +26,28 @@ def _emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
+_TCMALLOC = "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4"
+
+
+def _tune_env() -> None:
+    """Apply the SNIPPETS.md §2-3 serving-env tuning before jax loads:
+    quiet allocator + XLA settings (every knob skip-if-absent, nothing is a
+    hard dependency). tcmalloc needs LD_PRELOAD at process start, so when
+    it is present but not yet loaded we re-exec once (guarded by
+    REPRO_BENCH_REEXEC so a failed preload can't loop)."""
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    os.environ.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                          "60000000000")
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+    if (os.path.exists(_TCMALLOC)
+            and _TCMALLOC not in os.environ.get("LD_PRELOAD", "")
+            and "REPRO_BENCH_REEXEC" not in os.environ):
+        os.environ["LD_PRELOAD"] = (_TCMALLOC + " "
+                                    + os.environ.get("LD_PRELOAD", "")).strip()
+        os.environ["REPRO_BENCH_REEXEC"] = "1"
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+
+
 def _deep_merge(dst: dict, src: dict) -> dict:
     for k, v in src.items():
         if isinstance(v, dict) and isinstance(dst.get(k), dict):
@@ -413,6 +435,42 @@ def bench_quick(out_path: str = "BENCH_queue.json") -> None:
         _emit(f"quick/{kind}/batched", 1e6 / batched_thr["items_per_sec"],
               f"atomics_enq={batched_ops['atomics_per_enq']:.1f},"
               f"atomics_deq={batched_ops['atomics_per_deq']:.1f}")
+    # vectorized host fast path: one striped-lock acquisition per batch
+    # (ISSUE 6 tentpole) — measured at the batch width the array ops are
+    # amortized for, distinct from the "batched" row's modest batch=32
+    vec_ops = batched_atomic_op_run("cmp", ops=4000, batch=256)
+    vec_thr = single_thread_throughput("cmp", total=65536, batch=256)
+    result["cmp"]["vectorized"] = {
+        "batch": vec_ops["batch"],
+        "atomics_per_enq": vec_ops["atomics_per_enq"],
+        "atomics_per_deq": vec_ops["atomics_per_deq"],
+        "rmw_per_enq": vec_ops["rmw_per_enq"],
+        "rmw_per_deq": vec_ops["rmw_per_deq"],
+        "items_per_sec": vec_thr["items_per_sec"],
+    }
+    _emit("quick/cmp/vectorized", 1e6 / vec_thr["items_per_sec"],
+          f"batch={vec_ops['batch']},"
+          f"atomics_enq={vec_ops['atomics_per_enq']:.2f},"
+          f"atomics_deq={vec_ops['atomics_per_deq']:.2f}")
+    # engine-step admission: host policy drain vs the device-resident CMP
+    # ring (DESIGN.md §12). Interleaved best-of-3 pairs — the 1-core
+    # container's run-to-run noise swamps a single pass
+    from benchmarks.admission_bench import admission_throughput
+    admission_throughput(True, items=4000)  # warm the jit cache
+    host_best = dev_best = 0.0
+    for _ in range(3):
+        host_best = max(host_best,
+                        admission_throughput(False, items=32000)["items_per_sec"])
+        dev_best = max(dev_best,
+                       admission_throughput(True, items=32000)["items_per_sec"])
+    result["engine"] = {"device_admission": {
+        "host_items_per_sec": host_best,
+        "device_items_per_sec": dev_best,
+        "speedup": dev_best / host_best,
+    }}
+    _emit("quick/engine/device_admission", 1e6 / dev_best,
+          f"host={host_best:.0f}/s,device={dev_best:.0f}/s,"
+          f"speedup={dev_best / host_best:.2f}x")
     ela = live_resize(items=2400)
     assert ela["exact_order"], "live resize lost or reordered seats"
     result["replica"] = {"elasticity": ela}
@@ -440,6 +498,7 @@ SECTIONS = {
 
 
 def main() -> None:
+    _tune_env()
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale thread counts (slow on 1 core)")

@@ -35,7 +35,7 @@ from __future__ import annotations
 import threading
 from typing import Any, Iterable, List, Optional
 
-from repro.core.atomics import AtomicCell, cpu_pause
+from repro.core.atomics import AtomicArray, AtomicCell, cpu_pause
 from repro.core.domain import (
     AVAILABLE,
     CLAIMED,
@@ -62,6 +62,65 @@ class Node:
 
     def __repr__(self):  # pragma: no cover - debug aid
         return f"<Node cycle={self.cycle} state={self.state._v}>"
+
+
+class BlockNode:
+    """A batch segment (DESIGN.md §12): ONE linked-list node carrying ``n``
+    items with the contiguous cycle range [base+1, base+n]. This is the
+    BlockFIFO/SCQ move applied inside the CMP list — the batch's protection
+    state lives in one counted :class:`AtomicArray` instead of ``n`` cells,
+    so stamping, claiming and recycling the whole batch are single fused
+    array ops.
+
+    Layout of ``ctl`` (length n+1): indices [0, n) hold the per-item state
+    (FREE until armed, then AVAILABLE -> CLAIMED, monotone — blocks are never
+    recycled, so no ABA is possible through a stale block reference); index
+    [n] is the claim cursor, advanced by one fetch-add per dequeue batch.
+
+    ``cycle`` is the LAST item's cycle (base + n): it is the window key — the
+    block leaves the protection window only when its newest item does, which
+    is conservative and keeps the Phase-4 pointer+cycle dual check valid
+    (cycles stay monotone along the chain). ``data`` is written before the
+    splice publishes the block and never mutated afterwards, so claim winners
+    can read it without a data CAS."""
+
+    __slots__ = ("base", "n", "cycle", "next", "data", "ctl")
+
+    def __init__(self, data: List[Any], base: int, n: int):
+        self.base = base
+        self.n = n
+        self.cycle = base + n  # immutable window key (last item's cycle)
+        self.next = AtomicCell(None)
+        self.data = data
+        self.ctl = AtomicArray(n + 1)  # [0,n): item states; [n]: claim cursor
+
+    def take(self, want: int):
+        """Claim up to ``want`` items past the block cursor with one cursor
+        fetch-add and one vectorized exchange for the whole run. Returns
+        ``(items, hi_cycle, exhausted)`` where ``hi_cycle`` is the highest
+        cycle of the attempted range (every index in it is CLAIMED after the
+        exchange — by us or by a reclaim rescue — so publishing it is safe).
+        ``exhausted`` means the cursor has passed the end of the block."""
+        n = self.n
+        ctl = self.ctl
+        if ctl.load(n) >= n:
+            return [], -1, True
+        old = ctl.fetch_add(n, want)
+        start = old if old < n else n
+        end = old + want if old + want < n else n
+        if start >= end:
+            return [], -1, True
+        won = ctl.exchange_where(start, end, AVAILABLE, CLAIMED)
+        if won.all():
+            items = self.data[start:end]
+        else:
+            # A reclaim rescue beat us to behind-window holes in the range;
+            # deliver only the indices our exchange won (exactly-once).
+            items = [d for d, w in zip(self.data[start:end], won) if w]
+        return items, self.base + end, end >= n
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"<BlockNode base={self.base} n={self.n} cursor={self.ctl._a[self.n]}>"
 
 
 class NodePool:
@@ -222,28 +281,29 @@ class CMPQueue:
         return True
 
     def enqueue_many(self, items: Iterable[Any]) -> int:
-        """Batched enqueue (DESIGN.md §3): one cycle-range fetch-add and one
-        linked splice for the whole batch instead of per item. The batch is
-        pre-linked locally, so readers observe it fully formed the instant
-        the single tail CAS lands. Returns the number of items enqueued."""
+        """Vectorized batched enqueue (DESIGN.md §3/§12): one cycle-range
+        fetch-add, one striped state fill and one linked splice for the whole
+        batch — the batch becomes a single :class:`BlockNode`, so the cost is
+        O(1) Python bytecodes and a handful of counted atomics per *batch*,
+        not per item. Data and cycles are private until the single tail CAS
+        publishes the block fully formed. Returns the number enqueued."""
         batch = list(items)
         if not batch:
             return 0
         if any(d is None for d in batch):
             raise ValueError("CMPQueue payloads must be non-None (None marks empty slots)")
         n = len(batch)
-        nodes = self.pool.get_many(n)
-        # Phase 1 (batched): one fetch-add reserves the cycle range
-        # [base+1, base+n]; cycles stay immutable and monotone.
+        if n == 1:
+            self.enqueue(batch[0])
+            return 1
+        # Phase 1 (fused): one fetch-add reserves the cycle range
+        # [base+1, base+n]; one fill arms every item state.
         base = self.cycle.fetch_add(n)
-        for i, (node, data) in enumerate(zip(nodes, batch)):
-            node.data.store(data)
-            node.cycle = base + 1 + i
-            node.next.store(nodes[i + 1] if i + 1 < n else None)
-            node.state.store(AVAILABLE)
+        block = BlockNode(batch, base, n)
+        block.ctl.fill(0, n, AVAILABLE)
 
-        # Phase 2: one splice publishes the whole chain.
-        self._splice(nodes[0], nodes[-1])
+        # Phase 2: one splice publishes the whole block.
+        self._splice(block, block)
 
         # Phase 3: reclaim once if the range crossed a trigger multiple.
         if (base + n) // self.reclaim_period > base // self.reclaim_period:
@@ -290,8 +350,9 @@ class CMPQueue:
         last_deque_cycle = -1       # force initial cursor load
         last_cursor = current
         cursor_cycle = current.cycle
-        last_claimed: Optional[Node] = None
+        last_claimed = None
         max_cycle = -1
+        park = None  # partially-consumed block to park the scan cursor on
 
         # Phases 1+2: scan-cursor load and atomic node claiming.
         while len(out) < k and current is not None:
@@ -302,6 +363,30 @@ class CMPQueue:
                 current = self.scan_cursor.load()
                 last_cursor = current
                 cursor_cycle = last_cursor.cycle
+            if type(current) is BlockNode:
+                # Vectorized claim: the whole remaining want in one cursor
+                # fetch-add + one exchange (Phases 1-3 fused per block run).
+                got, hi, exhausted = current.take(k - len(out))
+                if got:
+                    out.extend(got)
+                    last_claimed = current
+                    if hi > max_cycle:
+                        max_cycle = hi
+                else:
+                    self.stats["deq_scans"] += 1
+                if not exhausted:
+                    if len(out) >= k:
+                        # Items remain past the block cursor: the scan cursor
+                        # parks ON the block (everything claimed or skipped
+                        # before it is non-AVAILABLE; its internal cursor
+                        # tracks the intra-block position).
+                        park = current
+                        break
+                    # A rescue stole part of our range: retake from the same
+                    # block — the cursor advanced, so this terminates.
+                    continue
+                current = current.next.load()
+                continue
             if current.state.cas(AVAILABLE, CLAIMED):
                 # Phase 3: claim data with CAS (guards vs stalled-thread ABA
                 # reuse). A lost race means the node was recycled underneath
@@ -334,9 +419,12 @@ class CMPQueue:
         # cursor minimality is preserved.
         sc = self.scan_cursor.load()
         if sc is last_cursor and cursor_cycle == sc.cycle:
-            nxt = last_claimed.next.load()
-            if nxt is None and self.cursor_to_claimed:
-                nxt = last_claimed  # tail claimed: park cursor on it (see __init__)
+            if park is not None:
+                nxt = park  # partially-consumed block: cursor points at it
+            else:
+                nxt = last_claimed.next.load()
+                if nxt is None and self.cursor_to_claimed:
+                    nxt = last_claimed  # tail claimed: park cursor on it (see __init__)
             advance_boundary = False
             if nxt is None or self.scan_cursor.cas(last_cursor, nxt):
                 advance_boundary = True
@@ -364,17 +452,23 @@ class CMPQueue:
             head = self.head.load()
             current = head.next.load()
 
+            rescued: List[Any] = []
             while current is not None:
                 original_next = current
                 new_next = current
-                batch: List[Node] = []
+                batch: List[Any] = []
                 # Phases 2-4: collect a batch of safely reclaimable nodes —
                 # the domain predicate (state == CLAIMED) & (cycle < dc - W).
                 # The cycle is immutable (plain read); the state load is the
-                # atomic half of the check.
+                # atomic half of the check. Block segments additionally get a
+                # hole rescue (see _block_rescue) before the check.
                 while current is not None:
-                    if not reclaim_enqueue_mask(current.state.load(),
-                                                current.cycle, dc, self.window):
+                    if type(current) is BlockNode:
+                        self._block_rescue(current, dc, rescued)
+                        if not self._block_reclaimable(current, dc):
+                            break
+                    elif not reclaim_enqueue_mask(current.state.load(),
+                                                  current.cycle, dc, self.window):
                         break
                     batch.append(current)
                     nxt = current.next.load()
@@ -384,8 +478,16 @@ class CMPQueue:
                     break
                 # Phase 5: single CAS advances head.next across the batch.
                 if head.next.cas(original_next, new_next):
-                    rescued: List[Any] = []
+                    scalars: List[Node] = []
                     for node in batch:
+                        if type(node) is BlockNode:
+                            # Blocks are never pooled: no ABA is possible
+                            # through a stale block reference, and ``data``
+                            # must stay readable for a claimer racing the
+                            # unlink, so the block simply drops to GC.
+                            node.next.store(None)
+                            reclaimed += node.n
+                            continue
                         # Beyond-paper fix (DESIGN.md §5): a claimer that was
                         # descheduled between its state CAS and its data CAS
                         # still owns undelivered data here. The paper destroys
@@ -400,18 +502,53 @@ class CMPQueue:
                         # Terminate stale traversals, then recycle.
                         node.next.store(None)
                         node.data.store(None)
-                    self.pool.put_many(batch)
-                    reclaimed += len(batch)
-                    if rescued:
-                        # Re-enqueue at the tail (the nested reclaim trigger
-                        # no-ops on the _reclaiming guard we hold).
-                        self.enqueue_many(rescued)
+                        scalars.append(node)
+                        reclaimed += 1
+                    self.pool.put_many(scalars)
                 else:
                     break  # concurrent modification: abandon, retry later
+            if rescued:
+                # Re-enqueue at the tail regardless of unlink success — block
+                # hole rescues happen during collection, so their items are
+                # already stolen. (The nested reclaim trigger no-ops on the
+                # _reclaiming guard we hold.)
+                self.enqueue_many(rescued)
         finally:
             self._reclaiming.store(0)
         self.stats["reclaimed"] += reclaimed
         return reclaimed
+
+    def _block_rescue(self, block: BlockNode, dc: int, rescued: List[Any]) -> None:
+        """Steal behind-window AVAILABLE holes below the block's claim cursor
+        — claim attempts that stalled between the cursor fetch-add and the
+        exchange (the block analogue of the scalar data rescue). One
+        vectorized exchange arbitrates against the waking claimer, so each
+        hole is delivered exactly once. Backlog items at or past the cursor
+        are never touched: AVAILABLE nodes stay absolutely protected."""
+        n = block.n
+        cursor = block.ctl.load(n)
+        if cursor <= 0:
+            return
+        lim = safe_cycle(dc, self.window) - block.base - 1
+        if lim > cursor:
+            lim = cursor
+        if lim > n:
+            lim = n
+        if lim <= 0:
+            return
+        won = block.ctl.exchange_where(0, lim, AVAILABLE, CLAIMED)
+        if won.any():
+            data = block.data
+            rescued.extend(data[i] for i in won.nonzero()[0])
+
+    def _block_reclaimable(self, block: BlockNode, dc: int) -> bool:
+        """A block is reclaimable iff its newest cycle left the window and no
+        AVAILABLE item remains (states are monotone AVAILABLE -> CLAIMED and
+        blocks are never recycled, so once true this stays true — the unlink
+        can never race a late claim win)."""
+        if block.cycle >= safe_cycle(dc, self.window):
+            return False
+        return block.ctl.count_equal(0, block.n, AVAILABLE) == 0
 
     # ------------------------------------------------------------------
     # diagnostics
@@ -432,7 +569,8 @@ class CMPQueue:
         min_linked_cycle = None
         while cur is not None:
             if min_linked_cycle is None:
-                min_linked_cycle = cur.cycle
+                min_linked_cycle = (cur.base + 1 if type(cur) is BlockNode
+                                    else cur.cycle)
             cur = cur.next.load()
         return {
             "deque_cycle": dc,
@@ -449,8 +587,15 @@ class CMPQueue:
         states, cycles = [], []
         cur = self.head.load().next.load()
         while cur is not None:
-            states.append(cur.state.load())
-            cycles.append(cur.cycle)
+            if type(cur) is BlockNode:
+                # Expand the block into per-item states/cycles so the domain
+                # checker sees the same shape as scalar nodes.
+                snap = cur.ctl.load_range(0, cur.n)
+                states.extend(int(s) for s in snap)
+                cycles.extend(range(cur.base + 1, cur.base + 1 + cur.n))
+            else:
+                states.append(cur.state.load())
+                cycles.append(cur.cycle)
             cur = cur.next.load()
         domain.check_quiesced(states, cycles, self.cycle.load(),
                               self.deque_cycle.load(), self.window)

@@ -83,6 +83,10 @@ class FabricConfig:
         across replicas (and re-partitioned on resize).
       page_size / max_seq / kv_window: paged-KV pool geometry + protection
         window.
+      device_admission: route engine admission through the device-resident
+        CMP ring (DESIGN.md §12) — ``False`` (host path), ``True`` (force
+        the ring; on CPU hosts the jit'd oracle runs in place of the Pallas
+        kernel), or ``"auto"`` (ring only when a TPU is attached).
 
     Checkpoint cadence:
       checkpoint_dir: frontier-snapshot directory (exact-seat resume).
@@ -117,6 +121,7 @@ class FabricConfig:
     num_pages: int = 64
     max_seq: int = 128
     kv_window: int = 4
+    device_admission: object = False  # False | True | "auto"
     # checkpoint cadence
     checkpoint_dir: Optional[str] = None
     checkpoint_every_n_steps: Optional[int] = None
@@ -219,6 +224,13 @@ class FabricConfig:
                     f"{self.max_seq}, page_size={self.page_size})")
             if self.kv_window < 1:
                 bad(f"kv_window must be >= 1 (got {self.kv_window})")
+            if self.device_admission not in (True, False, "auto"):
+                bad(f"device_admission must be True, False or 'auto' "
+                    f"(got {self.device_admission!r})")
+        elif self.device_admission:
+            bad("device_admission without arch: a scheduler-only fabric has "
+                "no engine admission path — set arch or drop "
+                "device_admission")
         elif self.params_dir is not None:
             bad("params_dir without arch: a scheduler-only fabric has no "
                 "model params to restore — set arch or drop params_dir")

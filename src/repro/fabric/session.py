@@ -112,7 +112,8 @@ class Fabric:
             max_batch=config.max_batch, page_size=config.page_size,
             num_pages=config.num_pages, window=config.kv_window,
             max_seq=config.max_seq, classes=classes, policy=config.policy,
-            min_steal=config.min_steal, transport=transport)
+            min_steal=config.min_steal, transport=transport,
+            device_admission=config.device_admission)
         return cls(config, group=group, model_cfg=model_cfg, params=params)
 
     @classmethod
@@ -159,7 +160,8 @@ class Fabric:
             min_steal=config.min_steal, window=config.kv_window,
             max_batch=config.max_batch, page_size=config.page_size,
             num_pages=config.num_pages, max_seq=config.max_seq,
-            transport=transport)
+            transport=transport,
+            device_admission=config.device_admission)
         return cls(config, group=group, model_cfg=model_cfg, params=params,
                    step=step)
 

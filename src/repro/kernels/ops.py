@@ -39,6 +39,29 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens):
                                interpret=_interpret())
 
 
+_ref_ring_jit = None
+
+
+def ring_step(state, cycle, meta, req, *, k, window, use_pallas=None):
+    """Fused admission-ring step (reclaim + enqueue-many + k-way claim +
+    frontier publish) in ONE device invocation. On TPU this is the Pallas
+    kernel; elsewhere the jit'd pure-jnp oracle runs as the fast path
+    (interpret-mode Pallas is reserved for the equivalence tests)."""
+    if use_pallas is None:
+        use_pallas = not _interpret()
+    if use_pallas:
+        from repro.kernels import cmp_ring as _ring
+
+        return _ring.cmp_ring_step(state, cycle, meta, req, k=k, window=window)
+    global _ref_ring_jit
+    if _ref_ring_jit is None:
+        from repro.kernels import ref as _ref
+
+        _ref_ring_jit = jax.jit(_ref.ref_ring_step,
+                                static_argnames=("k", "window"))
+    return _ref_ring_jit(state, cycle, meta, req, k=k, window=window)
+
+
 def claim(state, cycle, *, k, block_n=None):
     """Fused earliest-claim: (new_state, ids). ids==N => invalid.
     Pools larger than one VMEM block dispatch to the tiled grid kernel

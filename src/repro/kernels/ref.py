@@ -52,6 +52,48 @@ def ref_paged_attention(q, k_pages, v_pages, block_tables, seq_lens):
     return jnp.einsum("bht,bhtd->bhd", w, vg.astype(jnp.float32)).astype(q.dtype)
 
 
+def ref_ring_step(state, cycle, meta, req, *, k, window,
+                  free=0, available=1, claimed=2):
+    """Oracle for the fused admission-ring step (kernels/cmp_ring.py): window
+    reclaim + batched ring enqueue (contiguous prefix accept) + k-way
+    earliest-claim + monotone frontier publish, in pure jnp. Bit-identical to
+    the Pallas kernel; also serves as the compiled fast path on hosts without
+    a TPU. Returns (state', cycle', meta', claimed_cycles[k])."""
+    imax = jnp.iinfo(jnp.int32).max
+    n = state.shape[0]
+    enq, dc = meta[0], meta[1]
+    push_n = jnp.minimum(req[0], n)
+    want = req[1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    freeable = (state == claimed) & (cycle < dc - window)
+    state = jnp.where(freeable, free, state)
+
+    off = jnp.mod(idx - enq, n)
+    blocked = (off < push_n) & (state != free)
+    accepted = jnp.min(jnp.where(blocked, off, push_n))
+    take = off < accepted
+    state = jnp.where(take, available, state)
+    cycle = jnp.where(take, enq + 1 + off, cycle)
+
+    # Live ring cycles are unique, so the cascade's ascending-cycle claim
+    # order is exactly the sorted order of the AVAILABLE keys — a full sort
+    # plus threshold-select, which XLA CPU runs ~6x faster than top_k at
+    # ring sizes (top_k degenerates toward O(n*k) there).
+    key = jnp.where(state == available, cycle, imax)
+    sorted_keys = jnp.sort(key)
+    lane = jnp.arange(k)
+    take = jnp.minimum(want, jnp.minimum(jnp.sum(key != imax), k))
+    threshold = sorted_keys[jnp.maximum(take - 1, 0)]
+    sel = (key != imax) & (key <= threshold) & (take > 0)
+    claimed_cycles = jnp.where(lane < take, sorted_keys[:k], -1).astype(jnp.int32)
+    state = jnp.where(sel, claimed, state)
+    max_claimed = jnp.max(jnp.where(lane < take, claimed_cycles, dc))
+    new_meta = jnp.stack([enq + accepted,
+                          jnp.maximum(dc, max_claimed)]).astype(jnp.int32)
+    return state, cycle, new_meta, claimed_cycles
+
+
 def ref_claim(state, cycle, k, available=1, claimed=2):
     """Claim the k earliest-cycle AVAILABLE slots. Returns (new_state, ids,
     valid) — ids==n for invalid lanes (matches slotpool semantics)."""

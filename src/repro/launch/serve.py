@@ -44,6 +44,7 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
         arch=args.arch, smoke=args.smoke, params_dir=args.ckpt_dir,
         max_batch=args.max_batch, page_size=args.page_size,
         num_pages=args.num_pages, max_seq=256, kv_window=args.window,
+        device_admission=getattr(args, "device_admission", False),
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every_n_steps=args.checkpoint_every)
 
@@ -138,6 +139,14 @@ def main() -> None:
                     help="spread the replicas over N simulated hosts "
                          "(host-addressed seats over the sim transport; "
                          "1 = in-process local transport)")
+    ap.add_argument("--device-admission", dest="device_admission",
+                    nargs="?", const=True, default=False,
+                    type=lambda s: {"true": True, "false": False,
+                                    "auto": "auto"}[s.lower()],
+                    help="route engine admission through the device-resident "
+                         "CMP ring (DESIGN.md §12): flag alone forces the "
+                         "ring, 'auto' uses it only on TPU, 'false' keeps "
+                         "the host path")
     ap.add_argument("--verify-single-host", action="store_true",
                     help="run the workload under --hosts N and under one "
                          "host and assert identical per-class delivery "
@@ -177,6 +186,7 @@ def main() -> None:
                          page_size=config.page_size,
                          num_pages=config.num_pages,
                          max_seq=config.max_seq,
+                         device_admission=config.device_admission,
                          hosts=config.hosts, transport=config.transport,
                          params_dir=config.params_dir,
                          checkpoint_every_n_steps=(

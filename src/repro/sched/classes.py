@@ -268,6 +268,35 @@ class QueueClass:
         self.stats.delivered += len(out)
         return out
 
+    def drain_block(self, k: int) -> List[Envelope]:
+        """Bulk drain with the same delivery contract as :meth:`drain`, used
+        by the device-admission feeder (DESIGN.md §12). When the fast shape
+        applies — single shard, no requeues, nothing staged, and the claimed
+        run is seq-contiguous from the frontier — the per-item frontier and
+        stage bookkeeping collapses to O(1) per batch: one vectorized shard
+        claim, one frontier advance, one batched window-seat release, one
+        clock read. Any other shape routes through the exact per-item
+        :meth:`drain` (out-of-order runs are staged first, so nothing is
+        lost or reordered)."""
+        if self._requeue or self._stage or len(self.shards) != 1:
+            return self.drain(k)
+        envs = self.shards.queues[0].dequeue_many(k)
+        if not envs:
+            return []  # nothing claimable (or a producer mid-splice): retry next pull
+        base = self._frontier
+        n = len(envs)
+        if [e.seq for e in envs] != list(range(base, base + n)):
+            # Producers spliced out of seq order: merge the slow, exact way.
+            for e in envs:
+                self._stage[e.seq] = e
+            return self.drain(k)
+        self._frontier = base + n
+        if self.admit_window is not None:
+            self._inflight.fetch_add(-n)  # one batched seat release
+        self.stats.record_delivery_many(envs)
+        self.stats.delivered += n
+        return envs
+
     # ---------------------------------------------------------- checkpoint
     def _capture_pending(self) -> int:
         """Claim every spliced-but-undelivered envelope into the staging map
@@ -396,6 +425,17 @@ class Scheduler:
     def drain(self, k: int) -> List[Tuple[QueueClass, Envelope]]:
         """One admission batch: the policy composes per-class drains."""
         return self.policy.drain(self.classes, k)
+
+    def drain_bulk(self, k: int) -> List[Tuple[QueueClass, Envelope]]:
+        """Bulk admission drain for the device-admission feeder (DESIGN.md
+        §12): a single-class fabric has nothing to interleave, so the policy
+        merge is skipped in favor of the class's vectorized block drain; any
+        other shape (multi-class, policy-held heads) takes the normal
+        policy-composed drain."""
+        if len(self.classes) == 1 and self.policy.held() == 0:
+            qc = self.classes[0]
+            return [(qc, env) for env in qc.drain_block(k)]
+        return self.drain(k)
 
     def pending(self) -> int:
         return sum(c.pending() for c in self.classes) + self.policy.held()

@@ -35,6 +35,37 @@ class LatencyWindow:
             self._idx = (self._idx + 1) % self.capacity
         self.count += 1
 
+    def record_many(self, samples: List[float]) -> None:
+        """Batched append with slice-assigned wraparound (the bulk-drain
+        fast path): the reservoir is order-free — :meth:`percentile` sorts a
+        snapshot — so overwriting the oldest run with one or two C-speed
+        slice assignments keeps the same most-recent-N contents as N scalar
+        :meth:`record` calls."""
+        cap = self.capacity
+        buf = self._buf
+        self.count += len(samples)
+        if len(samples) >= cap:
+            self._buf = list(samples[-cap:])
+            self._idx = 0
+            return
+        room = cap - len(buf)
+        if room:
+            buf.extend(samples[:room])
+            samples = samples[room:]
+            if not samples:
+                return
+        i = self._idx
+        end = i + len(samples)
+        if end <= cap:
+            buf[i:end] = samples
+            self._idx = end % cap
+        else:
+            first = cap - i
+            buf[i:] = samples[:first]
+            rest = len(samples) - first
+            buf[:rest] = samples[first:]
+            self._idx = rest
+
     def percentile(self, p: float) -> Optional[float]:
         """p in [0, 100]; None when empty. Snapshot-sorts the ring (cheap at
         telemetry cadence, never on the hot path)."""
@@ -76,6 +107,12 @@ class ClassStats:
 
     def record_delivery(self, env) -> None:
         self.latency.record(time.monotonic() - env.t_submit)
+
+    def record_delivery_many(self, envs) -> None:
+        """Batched delivery accounting: one clock read for the whole batch
+        (the bulk-drain fast path, DESIGN.md §12)."""
+        now = time.monotonic()
+        self.latency.record_many([now - env.t_submit for env in envs])
 
     def snapshot(self, *, pending: int = 0,
                  shard_depths: Optional[List[int]] = None) -> dict:

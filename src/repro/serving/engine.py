@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.sched import Envelope, QueueClass, ReplicaSet, Scheduler
+from repro.serving.admission import DeviceAdmissionRing, resolve_device_admission
 from repro.serving.kv_cache import PagedKVPool
 from repro.serving.paged_model import paged_forward
 
@@ -75,7 +76,8 @@ class Engine:
                  page_size: int = 16, num_pages: int = 64, window: int = 4,
                  max_seq: int = 128,
                  classes: Optional[Sequence[QueueClass]] = None,
-                 policy="strict", sched=None, forward_fn=None):
+                 policy="strict", sched=None, forward_fn=None,
+                 device_admission=False, admit_prefetch: int = 0):
         assert all(k in ("dense", "moe") for k in cfg.block_pattern), \
             "paged engine serves attention-based families"
         self.cfg, self.params = cfg, params
@@ -114,12 +116,41 @@ class Engine:
         # shared callable so N engines share one compilation cache.
         self._forward = forward_fn or jax.jit(
             lambda p, t, kp, vp, bt, sl: paged_forward(p, t, cfg, kp, vp, bt, sl))
+        # Device-resident admission (DESIGN.md §12): policy-drained batches
+        # route through a bounded CMP ring on the accelerator — one fused
+        # reclaim+enqueue+claim+publish invocation per step. "auto" enables
+        # it only when a TPU is attached (host-fallback rule); True forces
+        # the ring path (the jit'd oracle stands in for Pallas on CPU hosts).
+        self._dev_admit = None
+        self._admit_prefetch = 0
+        if resolve_device_admission(device_admission):
+            # claim look-ahead well past max_batch: the fused invocation's
+            # fixed dispatch cost divides by claim_block, and the ordering
+            # relaxation it buys stays bounded by the prefetch depth.
+            self._dev_admit = DeviceAdmissionRing(
+                k=max_batch, claim_block=max(8 * max_batch, 2 * max_batch))
+            self._admit_prefetch = (int(admit_prefetch)
+                                    or 2 * self._dev_admit.claim_block)
 
     @property
     def pending(self) -> int:
-        """Accepted-but-not-laned items (incl. requeues), derived from the
-        scheduler's own counters — no engine-side bookkeeping to drift."""
-        return self.sched.pending()
+        """Accepted-but-not-laned items (incl. requeues and ring-resident
+        prefetch), derived from the scheduler's and ring's own counters —
+        no engine-side bookkeeping to drift."""
+        return self.sched.pending() + self.ring_pending
+
+    @property
+    def ring_pending(self) -> int:
+        """Entries prefetched into the device admission ring (0 on the
+        host path)."""
+        return 0 if self._dev_admit is None else self._dev_admit.pending
+
+    def flush_admission(self) -> None:
+        """Return every ring-resident entry to its exact class seat — the
+        checkpoint / resize / fail-host boundary (no-op on the host path)."""
+        if self._dev_admit is not None:
+            for qc, env in self._dev_admit.flush():
+                qc.requeue(env)
 
     # ---------------------------------------------------------------- client
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -199,6 +230,33 @@ class Engine:
         return True
 
     # ---------------------------------------------------------------- sched
+    def _drain_admission(self, want: int):
+        """Compose the admission batch of (QueueClass, Envelope) pairs.
+
+        Host path: one policy drain. Ring path: top the device ring up from
+        the scheduler (bulk drain when the fabric shape allows the O(1)
+        frontier advance) and claim ``want`` lanes in one fused device step.
+        Ring-rejected entries (ring full — rare by construction, the ring is
+        sized for the prefetch depth) go straight back to their exact class
+        seats. Prefetched entries admit in ring-cycle order, which relaxes
+        cross-refill policy order by at most the prefetch depth (DESIGN.md
+        §12); within one refill the policy's order is preserved exactly.
+        """
+        if self._dev_admit is None:
+            return self.sched.drain(want)
+        ring = self._dev_admit
+        fresh = []
+        if ring.buffered < want:  # a fused invocation is imminent: top up
+            need = max(want, self._admit_prefetch) - ring.pending
+            if need > 0:
+                drain = (getattr(self.sched, "drain_bulk", None)
+                         or self.sched.drain)
+                fresh = drain(min(need, ring.room))
+        claimed, rejected = ring.step(fresh, want)
+        for qc, env in rejected:
+            qc.requeue(env)
+        return claimed
+
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.active) if r is None]
         # Class-aware lane preemption: pending work of a *strictly higher*
@@ -221,8 +279,10 @@ class Engine:
         if not free:
             return
         # ONE policy drain composes the admission batch across classes
-        # (batched dequeue_many claims under the hood, strict FIFO per class).
-        batch = self.sched.drain(len(free))
+        # (batched dequeue_many claims under the hood, strict FIFO per class);
+        # on the ring path the batch instead comes out of one fused device
+        # claim over the prefetched entries.
+        batch = self._drain_admission(len(free))
         for idx, (lane, (qc, env)) in enumerate(zip(free, batch)):
             req: Request = env.payload
             need = (len(req.prompt) + self.page_size - 1) // self.page_size
@@ -402,7 +462,8 @@ class EngineReplicaGroup:
                  classes: Optional[Sequence[QueueClass]] = None,
                  policy="strict", min_steal: int = 1,
                  replica_set: Optional[ReplicaSet] = None,
-                 forward_fn=None, uid_start: int = 0, transport=None):
+                 forward_fn=None, uid_start: int = 0, transport=None,
+                 device_admission=False):
         if replica_set is None:
             if classes is None:
                 classes = [QueueClass("default", num_shards=num_replicas,
@@ -423,6 +484,7 @@ class EngineReplicaGroup:
         self._budget = dict(max_batch=max_batch, page_size=page_size,
                             num_pages=num_pages, window=window,
                             max_seq=max_seq)
+        self._device_admission = device_admission
         self._completed: Dict[int, Request] = {}  # survivors of resizes
         self.engines = self._build_engines()
         self._next_uid = int(uid_start)
@@ -446,7 +508,8 @@ class EngineReplicaGroup:
                    page_size=self._budget["page_size"], num_pages=pages[i],
                    window=self._budget["window"],
                    max_seq=self._budget["max_seq"],
-                   sched=r, forward_fn=self._fwd)
+                   sched=r, forward_fn=self._fwd,
+                   device_admission=self._device_admission)
             for i, r in enumerate(live)]
 
     # ---------------------------------------------------------------- client
@@ -487,6 +550,7 @@ class EngineReplicaGroup:
 
     def idle(self) -> bool:
         return (self.replica_set.pending() == 0
+                and all(eng.ring_pending == 0 for eng in self.engines)
                 and all(r is None for eng in self.engines
                         for r in eng.active))
 
@@ -528,6 +592,7 @@ class EngineReplicaGroup:
         if n == self.num_replicas:
             return self
         for eng in self.engines:
+            eng.flush_admission()  # ring entries back to exact seats
             for lane, req in enumerate(eng.active):
                 if req is not None:
                     eng._evict_lane(lane)  # exact-seat requeue
@@ -548,6 +613,7 @@ class EngineReplicaGroup:
         for eng in self.engines:
             if eng.sched.addr.host != host or not eng.sched.alive:
                 continue
+            eng.flush_admission()  # ring entries back to exact seats
             for lane, req in enumerate(eng.active):
                 if req is not None:
                     eng._evict_lane(lane)  # exact-seat requeue
@@ -566,6 +632,8 @@ class EngineReplicaGroup:
         requeue entries (their KV pages are not checkpointed — on restore
         they re-prefill, the preemption contract). The dict is plain JSON
         data: hand it to the async checkpointer's aux channel."""
+        for eng in self.engines:
+            eng.flush_admission()  # ring entries back to exact seats
         st = self.replica_set.state(encode=request_state)
         for eng in self.engines:
             for lane_env in eng._lane_env:

@@ -342,3 +342,99 @@ def test_batched_ops_fewer_atomics_than_scalar():
     assert deq_b < deq_s, (deq_b, deq_s)
     # the amortized fixed cost should be a real win, not noise
     assert enq_b <= 0.8 * enq_s, (enq_b, enq_s)
+
+
+def test_batched_matches_scalar_bit_identical_under_chaos():
+    """Property test (ISSUE 6): a random op stream applied once through the
+    scalar API and once through enqueue_many/dequeue_many delivers the
+    bit-identical item sequence, with the chaos hook live on both runs —
+    the vectorized fast path keeps the same FIFO and reclaim semantics,
+    and still routes every coordination event through the hook."""
+    rng = random.Random(42)
+    stream = []  # ("enq", [items]) | ("deq", k)
+    nxt = 0
+    for _ in range(400):
+        if rng.random() < 0.55:
+            n = rng.randint(1, 37)
+            stream.append(("enq", list(range(nxt, nxt + n))))
+            nxt += n
+        else:
+            stream.append(("deq", rng.randint(1, 41)))
+
+    def run(batched):
+        hook_kinds = []
+        chaos_rng = random.Random(7)
+
+        def hook(kind):
+            hook_kinds.append(kind)
+            if chaos_rng.random() < 0.002:
+                time.sleep(0)  # yield point at an atomic boundary
+        set_chaos_hook(hook)
+        try:
+            q = CMPQueue(window=32, reclaim_period=8, min_batch=2)
+            out = []
+            for op, arg in stream:
+                if op == "enq":
+                    if batched:
+                        q.enqueue_many(arg)
+                    else:
+                        for x in arg:
+                            q.enqueue(x)
+                elif batched:
+                    out.extend(q.dequeue_many(arg))
+                else:
+                    for _ in range(arg):
+                        d = q.dequeue()
+                        if d is None:
+                            break
+                        out.append(d)
+            # drain the backlog and reclaim: both paths must release
+            # everything behind the protection window
+            while q.dequeue_many(64):
+                pass
+            q.reclaim()
+            live = q.live_nodes()
+        finally:
+            set_chaos_hook(None)
+        return out, live, len(hook_kinds)
+
+    out_s, live_s, hooks_s = run(batched=False)
+    out_b, live_b, hooks_b = run(batched=True)
+    assert out_b == out_s, "batched delivery diverged from scalar"
+    # with the queue drained, reclaim leaves only window-protected nodes
+    assert live_b < 32 + 64 and live_s < 32 + 64, (live_b, live_s)
+    # the batched run coordinates less but never silently: every batch op
+    # still fires the chaos hook at least once
+    assert 0 < hooks_b < hooks_s, (hooks_b, hooks_s)
+
+
+def test_atomic_array_range_ops_count_once_and_arbitrate_exactly_once():
+    """AtomicArray contract (DESIGN.md §12): a range op is ONE counted
+    coordination event regardless of width, and per-index arbitration
+    (exchange_where) hands each slot to exactly one winner under
+    concurrent claimers."""
+    from repro.core.atomics import AtomicArray
+
+    arr = AtomicArray(256, init=1)
+    reset_op_counts()
+    arr.exchange_where(0, 256, 1, 2)
+    arr.fill(0, 128, 0)
+    arr.load_range(0, 256)
+    arr.count_equal(0, 256, 0)
+    assert sum(op_counts().values()) == 4, op_counts()
+    reset_op_counts()
+    arr.fetch_max(3, 17)
+    assert op_counts().get("max") == 1, op_counts()
+
+    arr2 = AtomicArray(512, init=1)
+    wins = [None] * 8
+
+    def claimer(t):
+        wins[t] = arr2.exchange_where(0, 512, 1, 2)  # boolean won-mask
+    ts = [threading.Thread(target=claimer, args=(t,)) for t in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    winners_per_slot = [sum(bool(w[i]) for w in wins) for i in range(512)]
+    assert winners_per_slot == [1] * 512, "lost or double-claimed slot"

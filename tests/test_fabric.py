@@ -484,3 +484,82 @@ def test_compat_shims_warn_and_work(model):
     u = fab2.submit([1, 2, 3], max_new_tokens=2)
     done = fab2.drain(max_steps=100)
     assert u in done and len(done[u].output) == 2
+
+
+# ---------------------------------------------------------------------------
+# device-resident admission through the fabric (ISSUE 6, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def test_config_validates_device_admission():
+    with pytest.raises(ValueError, match="device_admission"):
+        _serving_config(device_admission="yes")
+    with pytest.raises(ValueError, match="device_admission"):
+        FabricConfig(classes=(ClassSpec("a"),), device_admission=True)
+    for ok in (True, False, "auto"):
+        cfg = _serving_config(device_admission=ok)
+        assert cfg.device_admission == ok
+    # round-trips through JSON like every other field
+    cfg = _serving_config(device_admission=True)
+    assert FabricConfig.from_json(cfg.to_json()).device_admission is True
+
+
+def test_serving_fabric_resize_under_load_device_admission(model):
+    """ISSUE 6 acceptance: live resize with admission routed through the
+    device ring — ring-resident entries flush back to their exact seats
+    before lanes move, so exactly-once + no-loss hold unchanged."""
+    mcfg, params = model
+    fab = Fabric.open(_serving_config(device_admission=True),
+                      params=params, model_cfg=mcfg)
+    uids = fab.submit_many([[i + 1, 2] for i in range(8)],
+                           max_new_tokens=3, qclass="hi")
+    fab.step()
+    fab.resize(2)
+    assert fab.num_replicas == 2
+    done = fab.drain(max_steps=300)
+    assert set(done) >= set(uids), "request lost across resize"
+    assert len(done) == len(set(done)), "request served twice"
+    fab.close()
+
+
+def test_serving_fabric_multihost_host_loss_device_admission(model):
+    """ISSUE 6 acceptance: kill a host mid-wave with the device ring on —
+    the dead host's ring entries requeue at exact seats and survivors
+    serve everything exactly once."""
+    mcfg, params = model
+    fab = Fabric.open(
+        _serving_config(replicas=2, transport="sim", hosts=2,
+                        device_admission=True),
+        params=params, model_cfg=mcfg)
+    uids = fab.submit_many([[i + 1, 2] for i in range(8)],
+                           max_new_tokens=3, qclass="hi")
+    fab.step()
+    moved = fab.fail_host(1)
+    assert moved > 0
+    done = fab.drain(max_steps=300)
+    assert set(done) >= set(uids), "request lost across host failure"
+    assert len(done) == len(set(done)), "request served twice"
+    fab.close()
+
+
+def test_snapshot_restore_with_device_admission(model):
+    """sched_state() flushes the ring first, so a snapshot taken mid-wave
+    with device admission on restores to the exact same seats."""
+    mcfg, params = model
+    fab = Fabric.open(_serving_config(device_admission=True),
+                      params=params, model_cfg=mcfg)
+    uids = fab.submit_many([[i + 1, 3] for i in range(6)],
+                           max_new_tokens=3, qclass="lo")
+    fab.step()
+    snap = fab.snapshot()
+    done_a = fab.drain(max_steps=300)
+    fab.close()
+
+    fab2 = Fabric.from_snapshot(snap, params=params, model_cfg=mcfg)
+    done_b = fab2.drain(max_steps=300)
+    fab2.close()
+    # both futures serve every outstanding request exactly once
+    for done in (done_a, done_b):
+        assert set(done) | set(fab.completed if done is done_a
+                               else fab2.completed) >= set(uids)
+        assert len(done) == len(set(done))

@@ -495,3 +495,68 @@ def test_scheduler_snapshot_covers_all_classes():
     snap = s.snapshot()
     assert set(snap) == {"hi", "mid", "lo"}
     assert s.pending() == 36 - 10
+
+
+# ---------------------------------------------------------------------------
+# bulk-drain fast path (DESIGN.md §12): order + telemetry equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_latency_window_record_many_matches_scalar():
+    """record_many's slice-assigned wraparound keeps exactly the same
+    most-recent-N multiset (and percentiles) as N scalar records, across
+    random batch patterns that land on every wraparound case."""
+    import random
+    from repro.sched.stats import LatencyWindow
+
+    rng = random.Random(11)
+    for trial in range(30):
+        cap = rng.choice([4, 7, 32])
+        a, b = LatencyWindow(cap), LatencyWindow(cap)
+        feed = []
+        for _ in range(rng.randint(1, 12)):
+            batch = [rng.random() for _ in range(rng.randint(0, 3 * cap))]
+            feed.extend(batch)
+            for x in batch:
+                a.record(x)
+            b.record_many(batch)
+        assert a.count == b.count == len(feed)
+        assert sorted(a._buf) == sorted(b._buf), (trial, cap)
+        for p in (0, 50, 99, 100):
+            assert a.percentile(p) == b.percentile(p)
+
+
+def test_drain_bulk_matches_drain_order_and_stats():
+    """Scheduler.drain_bulk (the device-admission feeder) delivers the
+    identical envelope order as repeated policy drains on the eligible
+    shape (single class, no held heads), and keeps delivery telemetry."""
+    qa = QueueClass("a", window=4096)
+    sched_bulk = Scheduler([qa])
+    sched_ref = Scheduler([QueueClass("a", window=4096)])
+    for s in (sched_bulk, sched_ref):
+        s.submit_many("a", list(range(500)))
+    via_bulk = [env.payload for _, env in sched_bulk.drain_bulk(400)]
+    via_bulk += [env.payload for _, env in sched_bulk.drain_bulk(400)]
+    via_ref = []
+    while len(via_ref) < 500:
+        got = sched_ref.drain(64)
+        assert got
+        via_ref.extend(env.payload for _, env in got)
+    assert via_bulk == via_ref == list(range(500))
+    stats = qa.stats
+    assert stats.delivered == 500
+    assert stats.latency.count == 500
+    assert stats.latency.percentile(50) is not None
+
+
+def test_drain_bulk_falls_back_with_held_heads_or_multiclass():
+    """Outside the fast path's preconditions, drain_bulk must route through
+    the policy drain — cross-class order is a policy decision."""
+    hi = QueueClass("hi", priority=2, weight=4.0)
+    lo = QueueClass("lo", priority=0, weight=1.0)
+    sched = Scheduler([hi, lo], policy="strict")
+    sched.submit_many("lo", list(range(10)))
+    sched.submit_many("hi", list(range(100, 110)))
+    got = [env.payload for _, env in sched.drain_bulk(20)]
+    assert got[:10] == list(range(100, 110)), \
+        "bulk drain bypassed strict priority"

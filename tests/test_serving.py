@@ -332,3 +332,80 @@ def test_engine_replica_group_serves_and_recovers(dense_model):
     assert set(done_before) | set(done_after) >= set(wave), "lost a tenant"
     # uid continuity: new submissions never collide with pre-crash uids
     assert grp3.submit([3, 3], max_new_tokens=2, qclass="hi") not in wave
+
+
+# ---------------------------------------------------------------------------
+# device-resident admission (serving/admission.py, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def test_device_admission_ring_fifo_and_lookahead():
+    from repro.serving.admission import DeviceAdmissionRing
+
+    ring = DeviceAdmissionRing(k=4, claim_block=16)
+    entries = [("q", i) for i in range(40)]
+    out = []
+    i = 0
+    while len(out) < 40:
+        push, i = entries[i:i + 8], min(i + 8, 40)
+        claimed, rejected = ring.step(push, 4)
+        assert not rejected
+        out.extend(claimed)
+    assert out == entries, "ring admission reordered the FIFO"
+    # look-ahead actually amortized: far fewer kernel calls than steps
+    assert ring.stats["kernel_calls"] < ring.stats["steps"]
+    assert ring.pending == 0
+
+
+def test_device_admission_ring_flush_is_exact_and_reusable():
+    from repro.serving.admission import DeviceAdmissionRing
+
+    ring = DeviceAdmissionRing(k=2, claim_block=8)
+    entries = [("q", i) for i in range(20)]
+    claimed, _ = ring.step(entries, 2)
+    assert claimed == entries[:2]
+    # flush returns the rest: claim-buffered first, then unclaimed, in
+    # exact cycle (submission) order
+    assert ring.flush() == entries[2:]
+    assert ring.pending == 0 and ring.flush() == []
+    # ring survives the flush: cycles stay monotone, admission continues
+    more = [("q", i) for i in range(20, 30)]
+    claimed, rejected = ring.step(more, 2)
+    assert not rejected
+    while len(claimed) < 10:
+        got, rejected = ring.step([], 2)
+        assert got and not rejected
+        claimed.extend(got)
+    assert claimed == more
+
+
+def test_device_admission_ring_rejects_past_capacity():
+    from repro.serving.admission import DeviceAdmissionRing
+
+    ring = DeviceAdmissionRing(k=2, claim_block=2, capacity=8, window=2)
+    entries = [("q", i) for i in range(12)]
+    claimed, rejected = ring.step(entries, 0)
+    assert claimed == []
+    # contiguous-prefix accept: whatever fits stays FIFO, the suffix comes
+    # back for the host to requeue — nothing is dropped
+    assert claimed == [] and entries == entries[:12 - len(rejected)] + rejected
+    assert ring.pending + len(rejected) == 12
+
+
+def test_engine_device_admission_matches_host(dense_model):
+    """The ISSUE 6 exactness bar: admission routed through the device ring
+    serves the same requests to the same outputs as the host path."""
+    cfg, params = dense_model
+    outs = {}
+    for device_admission in (False, True):
+        eng = Engine(cfg, params, max_batch=2, page_size=8, num_pages=32,
+                     window=2, max_seq=64, device_admission=device_admission)
+        prompts = [[5, 17, 200, 3], [9, 9, 42], [100, 2, 7], [11] * 5]
+        uids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        done = eng.run_until_idle()
+        outs[device_admission] = [done[u].output for u in uids]
+        if device_admission:
+            assert eng._dev_admit.stats["kernel_calls"] > 0, \
+                "ring path never exercised"
+            assert eng.ring_pending == 0
+    assert outs[True] == outs[False]
