@@ -56,6 +56,13 @@ GATES = [
     # plausible runner-speed difference can trip it.
     ("replica.elasticity.resize_ms.to_4", "higher", 20.0),
     ("replica.elasticity.resize_ms.to_2", "higher", 20.0),
+    # Observability overhead (DESIGN.md §13): traced-at-0.01 vs obs-off
+    # fabric throughput. A ratio of two same-machine runs (runner speed
+    # cancels), near 1.0 by construction — base tolerance holds the traced
+    # fabric within ~15% of whatever the committed baseline ratio is,
+    # which catches an emit site going accidentally hot (unsampled work on
+    # the per-envelope path) without flaking on scheduler noise.
+    ("obs.overhead.throughput_ratio", "lower", 1.0),
 ]
 
 

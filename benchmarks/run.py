@@ -396,6 +396,34 @@ def bench_replica(full: bool, out_path: str = "BENCH_queue.json") -> None:
         f"loss: stealing did not absorb the dead host's seats")
 
 
+def bench_obs(full: bool, out_path: str = "BENCH_queue.json") -> None:
+    """Observability plane (DESIGN.md §13): traced-vs-off fabric throughput
+    at the production sampling rate (the zero-added-atomics overhead claim,
+    gated by check_regression.py) plus the full-rate per-stage latency
+    breakdown. Merges into BENCH_queue.json under "obs"."""
+    from benchmarks.obs_bench import obs_overhead, traced_breakdown
+
+    items = 24000 if full else 12000
+    r = obs_overhead(items=items)
+    _emit("obs/overhead", 1e6 / r["traced_items_per_sec"],
+          f"ratio={r['throughput_ratio']:.3f},"
+          f"off={r['off_items_per_sec']:.0f}/s,"
+          f"traced={r['traced_items_per_sec']:.0f}/s,"
+          f"trace_rate={r['trace_rate']}")
+    bd = traced_breakdown()
+    for pair, row in bd.items():
+        _emit(f"obs/stage/{pair}", row["p50_ms"] * 1e3,
+              f"n={row['n']},p50_ms={row['p50_ms']:.3f},"
+              f"p99_ms={row['p99_ms']:.3f}")
+    _merge_bench_json(out_path, {"obs": {"overhead": r,
+                                         "stage_breakdown": bd}})
+    print(f"# merged obs results into {out_path}", file=sys.stderr)
+    # ISSUE acceptance: tracing at trace_rate=0.01 costs <= 5% throughput.
+    assert r["throughput_ratio"] >= 0.95, (
+        f"obs overhead {1 - r['throughput_ratio']:.1%} > 5% at "
+        f"trace_rate={r['trace_rate']}")
+
+
 def bench_quick(out_path: str = "BENCH_queue.json") -> None:
     """--quick: scalar-vs-batched throughput + atomics-per-op for all four
     queue kinds, plus the live-resize reseat latency (replica.elasticity —
@@ -477,6 +505,19 @@ def bench_quick(out_path: str = "BENCH_queue.json") -> None:
     _emit("quick/replica/elasticity",
           sum(ela["resize_ms"].values()) * 1e3,
           ",".join(f"{k}_ms={v:.2f}" for k, v in ela["resize_ms"].items()))
+    # observability overhead (DESIGN.md §13): traced-at-0.01 vs obs-off
+    # fabric throughput — a same-machine ratio, gated near 1.0. Same
+    # items/rounds as `--only obs`: quick and the section merge-write the
+    # SAME obs.overhead key, so the committed baseline must mean one
+    # measurement no matter which lane last refreshed it (a smaller quick
+    # variant was noisy enough to drag the trajectory baseline ~9% low).
+    from benchmarks.obs_bench import obs_overhead
+    obs_r = obs_overhead(items=12000, rounds=3)
+    result["obs"] = {"overhead": obs_r}
+    _emit("quick/obs/overhead", 1e6 / obs_r["traced_items_per_sec"],
+          f"ratio={obs_r['throughput_ratio']:.3f},"
+          f"off={obs_r['off_items_per_sec']:.0f}/s,"
+          f"traced={obs_r['traced_items_per_sec']:.0f}/s")
     # deep-merge-write so other sections' keys (e.g. "sched", the rest of
     # "replica") survive a --quick
     _merge_bench_json(out_path, result)
@@ -494,6 +535,7 @@ SECTIONS = {
     "engine": bench_engine,
     "sched": bench_sched,
     "replica": bench_replica,
+    "obs": bench_obs,
 }
 
 
@@ -521,7 +563,7 @@ def main() -> None:
         if only and name not in only:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
-        if name in ("sched", "replica"):
+        if name in ("sched", "replica", "obs"):
             fn(args.full, out_path=args.out)
         else:
             fn(args.full)

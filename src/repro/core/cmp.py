@@ -256,7 +256,14 @@ class CMPQueue:
         self._reclaiming = AtomicCell(0)  # single-reclaimer guard (try-lock)
 
         # Diagnostics (non-atomic; approximate under races, exact when quiesced).
-        self.stats = {"enq_retries": 0, "deq_scans": 0, "reclaimed": 0, "reclaim_passes": 0}
+        self.stats = {"enq_retries": 0, "deq_scans": 0, "reclaimed": 0,
+                      "reclaim_passes": 0, "reclaim_contended": 0,
+                      "rescued": 0}
+
+    # flight-recorder attachment (repro.obs): set externally by a
+    # MetricsHub; rescues are rare control events, recorded when attached.
+    _obs = None
+    _obs_cls = "?"
 
     # ------------------------------------------------------------------
     # Algorithm 1: lock-free enqueue
@@ -443,6 +450,9 @@ class CMPQueue:
         """Batched, lock-free reclamation. Returns number of nodes recycled.
         Non-blocking: if another thread is reclaiming, returns immediately."""
         if not self._reclaiming.cas(0, 1):
+            # another thread holds the reclaim try-lock: this pass stalls
+            # (retried at the next trigger) — the "reclaim stall" gauge
+            self.stats["reclaim_contended"] += 1
             return 0
         reclaimed = 0
         try:
@@ -512,6 +522,10 @@ class CMPQueue:
                 # hole rescues happen during collection, so their items are
                 # already stolen. (The nested reclaim trigger no-ops on the
                 # _reclaiming guard we hold.)
+                self.stats["rescued"] += len(rescued)
+                if self._obs is not None:
+                    self._obs.emit("rescue", self._obs_cls, -1,
+                                   arg=len(rescued))
                 self.enqueue_many(rescued)
         finally:
             self._reclaiming.store(0)

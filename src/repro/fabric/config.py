@@ -24,6 +24,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.obs.recorder import ObsConfig
+
 _POLICIES = ("strict", "wfq", "fifo")
 
 
@@ -126,6 +128,10 @@ class FabricConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every_n_steps: Optional[int] = None
     checkpoint_window: int = 2
+    # observability plane (repro.obs): None = no hub, no recorders, zero
+    # overhead; an ObsConfig stands up the fabric-wide MetricsHub + flight
+    # recorders (Fabric.stats()["obs"], Fabric.obs exporters)
+    obs: Optional[ObsConfig] = None
 
     def __post_init__(self):
         # normalize: accept any iterable of ClassSpec (or spec dicts), then
@@ -134,6 +140,8 @@ class FabricConfig:
         specs = tuple(c if isinstance(c, ClassSpec) else ClassSpec(**c)
                       for c in self.classes)
         object.__setattr__(self, "classes", specs)
+        if isinstance(self.obs, dict):  # JSON round-trip form
+            object.__setattr__(self, "obs", ObsConfig(**self.obs))
         if self.max_replicas is None:
             object.__setattr__(self, "max_replicas", self.replicas)
         if self.shards_per_class is None:
@@ -247,6 +255,11 @@ class FabricConfig:
             bad("checkpoint_dir (frontier snapshots) must differ from "
                 "params_dir (model params): a frontier-only step would "
                 "shadow the params checkpoint's `latest`")
+        if self.obs is not None:
+            try:
+                self.obs.validate()
+            except ValueError as e:
+                bad(f"obs: {e}")
 
     # ------------------------------------------------------------------ JSON
     def to_json(self) -> dict:

@@ -86,6 +86,16 @@ class Fabric:
             from repro.checkpoint.checkpointer import AsyncCheckpointer
             self._ckpt = AsyncCheckpointer(config.checkpoint_dir,
                                            window=config.checkpoint_window)
+        # observability plane (DESIGN.md §13): one MetricsHub over the whole
+        # session — flight recorders attach to every emitting component by
+        # walking the object graph (re-walked after resize/fail_host, which
+        # rebuild engines). config.obs is None -> no hub, no recorders, and
+        # every emit site stays a single `is None` check.
+        self._obs_hub = None
+        if config.obs is not None and config.obs.enabled:
+            from repro.obs import MetricsHub
+            self._obs_hub = MetricsHub(config.obs)
+            self._obs_hub.attach(self._replica_set, engines=self.engines)
 
     # ------------------------------------------------------------- lifecycle
     @classmethod
@@ -314,6 +324,16 @@ class Fabric:
             # the step loop is not.
             self._ckpt.submit(self.step_count, {},
                               aux={"fabric": self.snapshot()})
+        hub = self._obs_hub
+        if (hub is not None and
+                self.step_count % hub.config.sample_every_n_steps == 0):
+            hub.sample(self._replica_set, self.engines)
+            if hub.config.snapshot_path is not None:
+                from repro.obs import append_jsonl_snapshot, strip_samples
+                append_jsonl_snapshot(
+                    hub.config.snapshot_path,
+                    {"step": self.step_count,
+                     "obs": strip_samples(hub.snapshot())})
         return out
 
     def drain(self, max_steps: int = 1000):
@@ -350,6 +370,8 @@ class Fabric:
             self._group.resize(n)
         else:
             self._replica_set.resize(n)
+        if self._obs_hub is not None:  # engines were rebuilt: re-attach
+            self._obs_hub.attach(self._replica_set, engines=self.engines)
         return self
 
     def fail_host(self, host: int) -> int:
@@ -361,12 +383,24 @@ class Fabric:
         reassigned."""
         self._check_open()
         if self._group is not None:
-            return self._group.fail_host(host)
-        return self._replica_set.fail_host(host)
+            moved = self._group.fail_host(host)
+        else:
+            moved = self._replica_set.fail_host(host)
+        if self._obs_hub is not None:  # survivor engines rebuilt: re-attach
+            self._obs_hub.attach(self._replica_set, engines=self.engines)
+        return moved
 
     @property
     def transport(self):
         return self._replica_set.transport
+
+    @property
+    def obs(self):
+        """The session's :class:`~repro.obs.MetricsHub` (None when
+        ``config.obs`` is unset/disabled) — the exporters' entry point:
+        ``perfetto_trace(fabric.obs.events())``,
+        ``prometheus_text(fabric.stats())``."""
+        return self._obs_hub
 
     # ------------------------------------------------------------ checkpoint
     def snapshot(self) -> dict:
@@ -428,6 +462,8 @@ class Fabric:
         if self._ckpt is not None:
             out["checkpoint"] = {"written": list(self._ckpt.written),
                                  "dropped": self._ckpt.dropped}
+        if self._obs_hub is not None:
+            out["obs"] = self._obs_hub.snapshot()
         return out
 
     # -------------------------------------------------------------- internal

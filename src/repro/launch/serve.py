@@ -38,7 +38,13 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
     from repro.fabric import ClassSpec, FabricConfig, tiered_classes
     classes = tiered_classes() if args.multitenant else (ClassSpec("default"),)
     hosts = getattr(args, "hosts", 1)
+    obs = None
+    if (getattr(args, "trace", None) or getattr(args, "metrics_out", None)
+            or getattr(args, "stats_interval", None)):
+        from repro.obs import ObsConfig
+        obs = ObsConfig(trace_rate=getattr(args, "trace_rate", 0.01))
     return FabricConfig(
+        obs=obs,
         classes=classes, replicas=args.replicas, policy=args.policy,
         hosts=hosts, transport="sim" if hosts > 1 else "local",
         arch=args.arch, smoke=args.smoke, params_dir=args.ckpt_dir,
@@ -64,8 +70,14 @@ def run_workload(fab, args):
             uids.append(uid)
             tenant_of[uid] = qclass or "default"
     order = []
-    for _ in range(2000):
+    interval = getattr(args, "stats_interval", None)
+    for step in range(1, 2001):
         order.extend(r.uid for r in fab.step())
+        if interval and step % interval == 0:
+            from repro.obs import format_class_lines
+            for line in format_class_lines(fab.stats(),
+                                           prefix=f"[serve] step {step}"):
+                print(line)
         if fab.idle():
             break
     done = dict(fab.completed)
@@ -159,6 +171,19 @@ def main() -> None:
     ap.add_argument("--checkpoint-every", type=int, default=None,
                     help="also write a frontier snapshot every N engine "
                          "steps (bounded in-loop recovery point)")
+    ap.add_argument("--trace", nargs="?", const="reports/trace.json",
+                    default=None, metavar="PATH",
+                    help="enable the flight recorder and write a Chrome/"
+                         "Perfetto trace.json after the run (default path "
+                         "reports/trace.json; load at ui.perfetto.dev)")
+    ap.add_argument("--trace-rate", type=float, default=0.01,
+                    help="head-sampling rate for lifecycle tracing "
+                         "(1.0 = every envelope; default 0.01)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus text exposition of the final "
+                         "fabric stats to PATH")
+    ap.add_argument("--stats-interval", type=int, default=None, metavar="N",
+                    help="print a per-class stats line every N fabric steps")
     args = ap.parse_args()
     if args.verify_single_host and args.hosts < 2:
         ap.error("--verify-single-host compares a multi-host layout "
@@ -257,6 +282,24 @@ def main() -> None:
                   f"requeued={cs['requeued']} p50_ms={cs['admit_p50_ms']} "
                   f"p99_ms={cs['admit_p99_ms']} "
                   f"slo_target_ms={slo['target_ms']} slo_ok={slo['ok']}")
+    if fab.obs is not None:
+        from repro.obs import perfetto_trace, prometheus_text, stage_breakdown
+        events = fab.obs.events()
+        if args.trace:
+            perfetto_trace(events, path=args.trace)
+            print(f"[serve] flight-recorder trace: {len(events)} events "
+                  f"(trace_rate={fab.obs.config.trace_rate}) -> {args.trace}")
+            for pair, row in stage_breakdown(events).items():
+                print(f"[serve]   {pair}: n={row['n']} "
+                      f"p50={row['p50_ms']:.3f}ms p99={row['p99_ms']:.3f}ms")
+        if args.metrics_out:
+            import os
+            d = os.path.dirname(args.metrics_out)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            with open(args.metrics_out, "w") as f:
+                f.write(prometheus_text(stats))
+            print(f"[serve] metrics exposition -> {args.metrics_out}")
     fab.close()  # writes the final frontier snapshot when --checkpoint-dir
     if args.checkpoint_dir:
         print(f"[serve] frontier checkpoint written: step {fab.step_count} "

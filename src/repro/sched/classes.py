@@ -157,6 +157,12 @@ class QueueClass:
         self._requeue: List[Envelope] = []      # preempted (seq < frontier)
         self.stats = ClassStats(name)
 
+    # flight-recorder attachment (repro.obs): None until a MetricsHub
+    # attaches — the un-observed hot path pays one `is None` check.
+    # Head-sampling is a pure function of the class cycle (`rec.sampled`),
+    # so every lifecycle emit site agrees on which envelopes are traced.
+    _obs = None
+
     # ------------------------------------------------------------- producers
     def pending(self) -> int:
         """Items submitted but not yet first-delivered (+ requeued)."""
@@ -180,7 +186,18 @@ class QueueClass:
         env = Envelope(seq, stamp, time.monotonic(), payload)
         self.shards.queues[seq % len(self.shards)].enqueue(env)
         self.stats.add_submitted()
+        rec = self._obs
+        if rec is not None and rec.sampled(seq):
+            self._trace_submit(rec, seq, env.t_submit)
         return env
+
+    def _trace_submit(self, rec, seq: int, t0: float) -> None:
+        """Off the fast path: the three producer-side lifecycle stages for
+        one sampled envelope (stamp, window seat, shard splice)."""
+        rec.emit("submit", self.name, seq, t=t0)
+        rec.emit("window_admit", self.name, seq, t=t0)
+        rec.emit("shard_enqueue", self.name, seq,
+                 arg=seq % len(self.shards))
 
     def submit_many(self, payloads: Sequence[Any], *, stamp: int = 0
                     ) -> List[Optional[Envelope]]:
@@ -211,6 +228,12 @@ class QueueClass:
         self.stats.add_submitted(n)
         if len(payloads) > n:
             self.stats.add_rejected(len(payloads) - n)
+        rec = self._obs
+        if rec is not None and rec.every:
+            # trace only the sampled seqs in [base, base+n): the batched
+            # path stays O(batch/every), not O(batch)
+            for seq in range(base + (-base) % rec.every, base + n, rec.every):
+                self._trace_submit(rec, seq, now)
         return envs + [None] * (len(payloads) - n)
 
     # ---------------------------------------------------------------- drain
@@ -220,16 +243,22 @@ class QueueClass:
         the requeue heap is served before the frontier, ordered by seq."""
         heapq.heappush(self._requeue, env)
         self.stats.requeued += 1
+        rec = self._obs
+        if rec is not None and rec.sampled(env.seq):
+            rec.emit("requeue", self.name, env.seq)
 
     def _stage_from_shards(self, want: int) -> int:
         """Claim up to ``want`` envelopes from every shard into the staging
         map. A steal (migration) between shards is invisible here: staging
         keys by seq, delivery is by frontier, placement does not matter."""
         got = 0
+        rec = self._obs
         for q in self.shards.queues:
             for env in q.dequeue_many(want):
                 self._stage[env.seq] = env
                 got += 1
+                if rec is not None and rec.sampled(env.seq):
+                    rec.emit("drain", self.name, env.seq)
         return got
 
     def drain(self, k: int) -> List[Envelope]:
@@ -245,6 +274,7 @@ class QueueClass:
         while self._requeue and len(out) < k:
             out.append(heapq.heappop(self._requeue))
         spins = 0
+        rec = self._obs
         while len(out) < k:
             while len(out) < k and self._frontier in self._stage:
                 env = self._stage.pop(self._frontier)
@@ -252,6 +282,8 @@ class QueueClass:
                 if self.admit_window is not None:
                     self._inflight.fetch_add(-1)  # window seat freed
                 self.stats.record_delivery(env)
+                if rec is not None and rec.sampled(env.seq):
+                    rec.emit("seat", self.name, env.seq)
                 out.append(env)
                 spins = 0
             if len(out) >= k:
@@ -295,6 +327,12 @@ class QueueClass:
             self._inflight.fetch_add(-n)  # one batched seat release
         self.stats.record_delivery_many(envs)
         self.stats.delivered += n
+        rec = self._obs
+        if rec is not None and rec.every:
+            now = time.monotonic()
+            for seq in range(base + (-base) % rec.every, base + n, rec.every):
+                rec.emit("drain", self.name, seq, t=now)
+                rec.emit("seat", self.name, seq, t=now)
         return envs
 
     # ---------------------------------------------------------- checkpoint

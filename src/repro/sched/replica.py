@@ -113,6 +113,10 @@ class ClassView:
         self._handoff_lock = threading.Lock()
         self.stats = ClassStats(qclass.name)
 
+    # flight-recorder attachment (repro.obs): the owning replica's ring;
+    # None until a MetricsHub attaches (one `is None` check un-observed)
+    _obs = None
+
     # ---- QueueClass facade ------------------------------------------------
     @property
     def name(self) -> str:
@@ -168,6 +172,9 @@ class ClassView:
         contract, replica-local."""
         heapq.heappush(self._requeue, env)
         self.stats.requeued += 1
+        rec = self._obs
+        if rec is not None and rec.sampled(env.seq):
+            rec.emit("requeue", self.name, env.seq)
 
     # ---- drain ------------------------------------------------------------
     def _release_lost(self) -> None:
@@ -224,8 +231,11 @@ class ClassView:
             env = self._stage.pop(nxt, None)
             claimed_any = False
             if env is None:
+                rec = self._obs
                 for e in self.transport.fetch(self.name, s, k, self.addr):
                     claimed_any = True
+                    if rec is not None and rec.sampled(e.seq):
+                        rec.emit("drain", self.name, e.seq, arg=s)
                     if e.seq == nxt:
                         env = e
                     else:
@@ -244,6 +254,9 @@ class ClassView:
             # We hold the claimed envelope -> we are the unique advancer.
             self.seats[s].next_seat.store(nxt + self._stride)
             self._deliver(env, first=True)
+            rec = self._obs
+            if rec is not None and rec.sampled(env.seq):
+                rec.emit("seat", self.name, env.seq, arg=s)
             out.append(env)
         return out
 
@@ -286,6 +299,10 @@ class SchedulerReplica:
         self.stolen_cycles = 0  # pending cycles acquired via steals
         self.empty_drains = 0   # drain calls that found nothing (idleness)
         self._in_drain = False  # fence for fail_host (plain GIL-atomic bool)
+
+    # flight-recorder attachment (repro.obs); steals are rare control
+    # events, recorded unconditionally when a hub is attached
+    _obs = None
 
     # ---- Scheduler facade -------------------------------------------------
     @property
@@ -378,6 +395,10 @@ class SchedulerReplica:
         if self.transport.claim_seat(v.name, s, self.addr):
             self.steals += 1
             self.stolen_cycles += v._remaining(s)
+            rec = self._obs
+            if rec is not None:
+                rec.emit("steal", v.name, -1,
+                         arg={"shard": s, "depth": depth})
             return depth
         return 0
 

@@ -16,6 +16,26 @@ from typing import List, Optional
 
 from repro.core.atomics import AtomicCell
 
+#: Merged-snapshot reservoirs are decimated past this size so chained
+#: roll-ups (the resize-retirement path folds old aggregates into new ones)
+#: stay bounded. Decimation strides over the *sorted* pool, preserving the
+#: distribution shape.
+_POOL_CAP = 8192
+
+
+def _interp_percentile(s: List[float], p: float) -> float:
+    """Percentile with linear interpolation between closest ranks.
+    ``s`` must be sorted ascending and non-empty; ``p`` in [0, 100]."""
+    n = len(s)
+    f = (p / 100.0) * (n - 1)
+    if f <= 0.0:
+        return s[0]
+    lo = int(f)
+    if lo >= n - 1:
+        return s[n - 1]
+    frac = f - lo
+    return s[lo] + (s[lo + 1] - s[lo]) * frac
+
 
 class LatencyWindow:
     """Fixed-size ring of the most recent latency samples (seconds).
@@ -68,12 +88,19 @@ class LatencyWindow:
 
     def percentile(self, p: float) -> Optional[float]:
         """p in [0, 100]; None when empty. Snapshot-sorts the ring (cheap at
-        telemetry cadence, never on the hot path)."""
+        telemetry cadence, never on the hot path). Linear interpolation
+        between closest ranks (numpy's default), not nearest-rank: at small
+        sample counts nearest-rank rounding can move a p99 by a whole sample
+        step, which is exactly the regime the SLO view reads."""
         if not self._buf:
             return None
-        s = sorted(self._buf)
-        i = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
-        return s[i]
+        return _interp_percentile(sorted(self._buf), p)
+
+    def samples(self) -> List[float]:
+        """Copy of the retained reservoir contents (unordered, seconds).
+        Lets aggregators pool raw samples across replicas for exact merged
+        percentiles instead of conservative picks."""
+        return list(self._buf)
 
 
 class ClassStats:
@@ -129,15 +156,18 @@ class ClassStats:
             "gap_waits": self.gap_waits,
             "admit_p50_ms": None if p50 is None else p50 * 1e3,
             "admit_p99_ms": None if p99 is None else p99 * 1e3,
+            "latency_samples": self.latency.samples(),
         }
 
 
 def aggregate_class_snapshots(per_replica: List[dict]) -> dict:
     """Fabric-wide roll-up of one class's per-replica ``ClassStats``
-    snapshots: counters and shard depths add; the latency percentiles are
-    summarized conservatively (worst replica's p99, best replica's p50) —
-    replicas keep independent reservoirs, so exact merged percentiles
-    would need the raw samples."""
+    snapshots: counters and shard depths add; latency percentiles merge
+    *exactly* by pooling each replica's raw reservoir samples
+    (``latency_samples``, seconds) and recomputing over the pool. Snapshots
+    lacking raw samples (e.g. deserialized legacy aggregates) fall back to
+    the conservative pick — worst replica's p99, best replica's p50 — for
+    the whole merge, since a partial pool would under-weight them."""
     assert per_replica
     out = dict(per_replica[0])
     for snap in per_replica[1:]:
@@ -145,7 +175,27 @@ def aggregate_class_snapshots(per_replica: List[dict]) -> dict:
                     "requeued", "gap_waits"):
             out[key] = out[key] + snap[key]
         out["shard_depths"] = out["shard_depths"] + snap["shard_depths"]
+
+    pooled: List[float] = []
+    exact = True
+    for snap in per_replica:
+        s = snap.get("latency_samples")
+        if s is not None:
+            pooled.extend(s)
+        elif snap.get("admit_p50_ms") is not None:
+            exact = False  # has latency but no raw samples to pool
+    if pooled and exact:
+        pooled.sort()
+        out["admit_p50_ms"] = _interp_percentile(pooled, 50) * 1e3
+        out["admit_p99_ms"] = _interp_percentile(pooled, 99) * 1e3
+        if len(pooled) > _POOL_CAP:
+            stride = -(-len(pooled) // _POOL_CAP)
+            pooled = pooled[::stride]
+        out["latency_samples"] = pooled
+    else:
         for key, pick in (("admit_p50_ms", min), ("admit_p99_ms", max)):
-            vals = [v for v in (out[key], snap[key]) if v is not None]
+            vals = [snap.get(key) for snap in per_replica]
+            vals = [v for v in vals if v is not None]
             out[key] = pick(vals) if vals else None
+        out["latency_samples"] = sorted(pooled) if pooled else None
     return out

@@ -50,6 +50,7 @@ from __future__ import annotations
 import json
 import random
 import threading
+import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 from repro.sched.classes import (Envelope, decode_envelope, encode_envelopes)
@@ -115,6 +116,9 @@ class Transport:
     num_hosts = 1
     _encode = None  # payload -> JSON-able (wire/codec hook)
     _decode = None  # JSON-able -> payload
+    # metrics-plane attachment (repro.obs.MetricsHub): when set, remote
+    # operations report their round-trip time via ``_obs.record_rtt``
+    _obs = None
 
     def bind(self, scheduler, seats: Dict[str, List]) -> None:
         """Attach to the fabric state (class queues + seat cells)."""
@@ -274,6 +278,12 @@ class SimHostTransport(Transport):
         return host not in self._dead
 
     # ---- chaos + wire -----------------------------------------------------
+    def _rtt(self, addr, t0: float) -> None:
+        """Report one remote operation's round-trip time to the attached
+        metrics hub (no-op until a MetricsHub attaches)."""
+        if self._obs is not None:
+            self._obs.record_rtt(addr.host, time.perf_counter() - t0)
+
     def _roll(self, p: float) -> bool:
         if p <= 0.0:
             return False
@@ -312,9 +322,11 @@ class SimHostTransport(Transport):
                     parked = self._inflight.pop((cls_name, shard), [])
             return parked + q.dequeue_many(k)
         # remote: the request can be lost BEFORE anything is claimed
+        t0 = time.perf_counter()
         if self._roll(self.drop):
             with self._lock:
                 self.drops += 1
+            self._rtt(addr, t0)
             return []
         with self._lock:
             parked = self._inflight.pop((cls_name, shard), [])
@@ -331,13 +343,16 @@ class SimHostTransport(Transport):
             with self._lock:
                 self._rng.shuffle(out)
                 self.reordered += 1
+        self._rtt(addr, t0)
         return out
 
     def publish(self, cls_name, shard, envs, addr):
         if not envs:
             return 0
         envs = list(envs)
-        if self.shard_home(shard) != addr.host:
+        remote = self.shard_home(shard) != addr.host
+        t0 = time.perf_counter()
+        if remote:
             if self._roll(self.drop):
                 with self._lock:
                     self.retransmits += 1  # republish is retried-until-acked
@@ -345,11 +360,15 @@ class SimHostTransport(Transport):
         with self._lock:
             self.publishes += 1
         self._sched.by_name[cls_name].shards.queues[shard].enqueue_many(envs)
+        if remote:
+            self._rtt(addr, t0)
         return len(envs)
 
     def claim_seat(self, cls_name, shard, addr):
         seat = self._seats[cls_name][shard]
-        if self.shard_home(shard) != addr.host:
+        remote = self.shard_home(shard) != addr.host
+        t0 = time.perf_counter()
+        if remote:
             with self._lock:
                 self.remote_claims += 1
                 self.remote_msgs += 1
@@ -357,9 +376,13 @@ class SimHostTransport(Transport):
             if self._roll(self.drop):
                 with self._lock:
                     self.drops += 1
+                self._rtt(addr, t0)
                 return False
         from repro.sched.steal import claim_seat
-        return claim_seat(seat, addr)
+        ok = claim_seat(seat, addr)
+        if remote:
+            self._rtt(addr, t0)
+        return ok
 
     # ---- lifecycle --------------------------------------------------------
     def _flush_inflight(self, keys=None) -> int:

@@ -90,6 +90,11 @@ class DeviceAdmissionRing:
         self.stats = {"steps": 0, "kernel_calls": 0, "pushed": 0,
                       "claimed": 0, "rejected": 0}
 
+    # flight-recorder attachment (repro.obs): kernel calls and flushes are
+    # already amortized/rare, so both are recorded unconditionally when a
+    # MetricsHub has attached a recorder here.
+    _obs = None
+
     @property
     def pending(self) -> int:
         """Entries resident in the admission path: unclaimed ring slots plus
@@ -141,6 +146,10 @@ class DeviceAdmissionRing:
             self.stats["pushed"] += accepted
             self.stats["rejected"] += len(entries) - accepted
             rejected = list(entries[accepted:])
+            if self._obs is not None:
+                self._obs.emit("claim_block", "_ring", self._enq,
+                               arg={"pushed": accepted,
+                                    "claimed": n_claimed})
         lo = self._served
         hi = min(lo + want, len(self._claimed))
         out = self._claimed[lo:hi]
@@ -162,4 +171,6 @@ class DeviceAdmissionRing:
         self._mirror = []
         self.state = np.zeros_like(self.state)
         self.meta = np.asarray([self._enq, self._enq], np.int32)
+        if self._obs is not None:
+            self._obs.emit("flush", "_ring", self._enq, arg=len(out))
         return out

@@ -72,6 +72,11 @@ def request_from_state(state: dict) -> "Request":
 
 
 class Engine:
+    # flight-recorder attachment (repro.obs): the feeding replica's ring;
+    # None until a MetricsHub attaches (re-applied on resize/fail_host,
+    # which rebuild engines)
+    _obs = None
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  page_size: int = 16, num_pages: int = 64, window: int = 4,
                  max_seq: int = 128,
@@ -312,6 +317,9 @@ class Engine:
             self.seq_lens = self.seq_lens.at[lane].set(len(req.prompt))
             self.last_tok = self.last_tok.at[lane].set(tok)
             req.output.append(tok)
+            rec = self._obs
+            if rec is not None and rec.sampled(env.seq):
+                rec.emit("lane_prefill", qc.name, env.seq, arg=lane)
 
     def _grow_pages(self) -> None:
         """Allocate fresh pages for every lane whose next token crosses a page
@@ -380,13 +388,24 @@ class Engine:
         nxt_np = np.asarray(nxt)
         sl_np = np.asarray(self.seq_lens)
         done = []
+        rec = self._obs
         for lane in np.nonzero(active_np)[0]:
             req = self.active[lane]
             req.output.append(int(nxt_np[lane]))
+            lane_env = self._lane_env[lane]
+            traced = (rec is not None and lane_env is not None
+                      and rec.sampled(lane_env[1].seq))
+            if traced and len(req.output) == 2:
+                # first post-prefill token: the lane has entered steady decode
+                rec.emit("decode", lane_env[0].name, lane_env[1].seq,
+                         arg=int(lane))
             if (len(req.output) >= req.max_new_tokens
                     or sl_np[lane] + 1 >= self.max_seq):
                 done.append(req)
                 self.completed[req.uid] = req
+                if traced:
+                    rec.emit("complete", lane_env[0].name, lane_env[1].seq,
+                             arg=len(req.output))
                 self._retire_request(int(lane))
         return done
 

@@ -526,6 +526,58 @@ def test_latency_window_record_many_matches_scalar():
             assert a.percentile(p) == b.percentile(p)
 
 
+def test_percentile_linear_interpolation():
+    """percentile() interpolates between ranks (numpy-style 'linear'), not
+    nearest-rank: the p50 of an even-count reservoir is the midpoint."""
+    from repro.sched.stats import LatencyWindow
+    w = LatencyWindow(capacity=16)
+    w.record_many([0.0, 10.0, 20.0, 30.0])
+    assert w.percentile(50) == 15.0
+    assert w.percentile(25) == 7.5
+    assert w.percentile(0) == 0.0
+    assert w.percentile(100) == 30.0
+    assert w.samples() == [0.0, 10.0, 20.0, 30.0]
+
+
+def test_aggregate_class_snapshots_pools_samples_exactly():
+    """Merging per-replica snapshots pools the raw reservoirs: the merged
+    percentiles equal a single window fed every sample, not the min/max
+    pick of the per-replica percentiles."""
+    from repro.sched.stats import (ClassStats, LatencyWindow,
+                                   aggregate_class_snapshots)
+    a, b = ClassStats("x"), ClassStats("x")
+    a.latency.record_many([0.001 * i for i in range(10)])
+    b.latency.record_many([0.010 * i for i in range(7)])
+    merged = aggregate_class_snapshots([a.snapshot(), b.snapshot()])
+    ref = LatencyWindow(64)
+    ref.record_many(a.latency.samples() + b.latency.samples())
+    assert merged["admit_p50_ms"] == ref.percentile(50) * 1e3
+    assert merged["admit_p99_ms"] == ref.percentile(99) * 1e3
+    assert sorted(merged["latency_samples"]) == sorted(ref.samples())
+
+
+def test_aggregate_class_snapshots_empty_and_legacy():
+    """No latency anywhere -> None percentiles; a legacy snapshot carrying
+    percentiles but no raw samples forces the conservative whole-merge
+    fallback (worst p99, best p50) instead of an under-weighted pool."""
+    from repro.sched.stats import ClassStats, aggregate_class_snapshots
+    empty = [ClassStats("x").snapshot() for _ in range(3)]
+    merged = aggregate_class_snapshots(empty)
+    assert merged["admit_p50_ms"] is None
+    assert merged["admit_p99_ms"] is None
+    assert merged["latency_samples"] is None
+
+    fresh = ClassStats("x")
+    fresh.latency.record_many([0.002, 0.004])
+    legacy = ClassStats("x")
+    legacy.latency.record_many([0.5])
+    legacy_snap = legacy.snapshot()
+    del legacy_snap["latency_samples"]  # deserialized pre-PR-7 aggregate
+    merged = aggregate_class_snapshots([fresh.snapshot(), legacy_snap])
+    assert merged["admit_p99_ms"] == 500.0  # worst replica's p99
+    assert merged["admit_p50_ms"] == pytest.approx(3.0)  # best replica's p50
+
+
 def test_drain_bulk_matches_drain_order_and_stats():
     """Scheduler.drain_bulk (the device-admission feeder) delivers the
     identical envelope order as repeated policy drains on the eligible
