@@ -63,6 +63,17 @@ GATES = [
     # which catches an emit site going accidentally hot (unsampled work on
     # the per-envelope path) without flaking on scheduler noise.
     ("obs.overhead.throughput_ratio", "lower", 1.0),
+    # Closed-loop control plane (DESIGN.md §14): the bursty-wave replay.
+    # p99_ms is the closed loop's interactive admission p99 — wall-clock
+    # latency with ~1ms simulated service steps, so absolute runner speed
+    # matters little but scheduler noise does: 10x tolerance (fails past
+    # ~2.5x baseline) catches the real failure mode — the controller not
+    # growing, which lands at the static fabric's ~14x-target latency.
+    # resize_count is counted, not timed, but burst-edge timing can shift
+    # a decision tick either way: 2x tolerance allows ±1 resize around the
+    # baseline walk (1->2->4->3->2->1) while still failing on flapping.
+    ("control.bursty.p99_ms", "higher", 10.0),
+    ("control.bursty.resize_count", "higher", 2.0),
 ]
 
 

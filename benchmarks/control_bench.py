@@ -1,0 +1,134 @@
+"""Closed-loop control-plane benchmark (DESIGN.md §14): a bursty 3-class
+wave replayed against a static 1-replica fabric and against the same
+fabric with the SLO-driven autoscaler armed.
+
+The static strict fabric misses the 5 ms interactive p99 target during the
+burst (the backlog grows linearly while arrivals outrun one replica's
+drain budget); the closed loop grows replicas within a couple of decision
+ticks, keeps interactive inside its target, and shrinks back once the
+burst passes — with a resize count bounded by the cooldown (no flapping).
+
+Sized for the 1-core container: the win is a queueing-theory shape
+(capacity vs arrival rate), not a hardware one.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+TARGET_MS = 5.0
+
+
+def _pctl(xs: List[float], p: float) -> float:
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(p / 100.0 * (len(s) - 1))))]
+
+
+def bursty_replay(closed_loop: bool, *, dry_run: bool = False,
+                  quiet_waves: int = 8, burst_waves: int = 40,
+                  cool_waves: int = 24,
+                  quiet_wave: Optional[Dict[str, int]] = None,
+                  burst_wave: Optional[Dict[str, int]] = None,
+                  drain_k: int = 8, service_s: float = 0.001,
+                  max_steps: int = 2000) -> Dict:
+    """Replay quiet -> burst -> quiet arrivals through one scheduler-only
+    fabric and measure per-class admission latency (submit -> delivery).
+
+    ``closed_loop=False`` pins the fabric at 1 replica; ``True`` arms the
+    controller (1 replica opening, ceiling 4). ``dry_run=True`` arms the
+    controller but disables actuation — the decision log fills while the
+    fabric stays static (the controller-invariance baseline the e2e test
+    compares delivery against). Also returns the per-class delivered seq
+    streams ("order") for exactness checks: exactly-once and every shard
+    cycle-run (seq mod shards) in order, the fabric's delivery invariant."""
+    from repro.fabric import Fabric, FabricConfig, tiered_classes
+
+    quiet_wave = quiet_wave or {"interactive": 2, "batch": 2,
+                                "background": 2}
+    burst_wave = burst_wave or {"interactive": 12, "batch": 12,
+                                "background": 12}
+    control = None
+    obs = None
+    if closed_loop or dry_run:
+        from repro.control import ControlConfig
+        from repro.obs import ObsConfig
+        control = ControlConfig(
+            dry_run=dry_run, decide_every_n_steps=1, grow_backlog=4.0,
+            shrink_backlog=2.0, hysteresis_up=1, hysteresis_down=3,
+            resize_cooldown=2)
+        obs = ObsConfig(trace_rate=0.0, sample_every_n_steps=1)
+    fab = Fabric.open(FabricConfig(
+        classes=tiered_classes(interactive_slo_ms=TARGET_MS,
+                               batch_slo_ms=100.0),
+        replicas=1, max_replicas=4, shards_per_class=4, policy="strict",
+        drain_k=drain_k, queue_window=4096, obs=obs, control=control))
+
+    lat: Dict[str, List[float]] = {n: [] for n in burst_wave}
+    order: Dict[str, List] = {n: [] for n in burst_wave}
+    replica_trail: List[int] = []
+
+    def drain_once() -> int:
+        batch = fab.step()
+        now = time.monotonic()
+        for qc, env in batch:
+            lat[qc.name].append((now - env.t_submit) * 1e3)
+            order[qc.name].append(env.seq)
+        replica_trail.append(fab.num_replicas)
+        if batch:
+            time.sleep(service_s)  # simulated engine-step service time
+        return len(batch)
+
+    # The cool-down phase is longer than the warm-up: the closed loop
+    # first drains the residual burst backlog at full size, then needs
+    # hysteresis_down idle ticks per shrink to walk back down.
+    waves = ([quiet_wave] * quiet_waves + [burst_wave] * burst_waves
+             + [quiet_wave] * cool_waves)
+    t0 = time.perf_counter()
+    for w, wave in enumerate(waves):
+        for name, n in wave.items():
+            fab.submit_many([(name, w, j) for j in range(n)], qclass=name)
+        drain_once()
+    steps = 0
+    while drain_once() > 0 and steps < max_steps:  # drain the backlog
+        steps += 1
+    wall = time.perf_counter() - t0
+
+    view = fab.stats_view()
+    out = {
+        "mode": ("closed_loop" if closed_loop
+                 else "dry_run" if dry_run else "static"),
+        "waves": len(waves),
+        "shards_per_class": 4,
+        "drain_k": drain_k,
+        "service_ms": service_s * 1e3,
+        "wall_s": wall,
+        "resize_count": view.resizes,
+        "max_replicas_seen": max(replica_trail),
+        "final_replicas": fab.num_replicas,
+        "decisions": (view.control or {}).get("decisions", 0),
+        "classes": {name: {"n": len(xs), "p50_ms": _pctl(xs, 50),
+                           "p99_ms": _pctl(xs, 99)}
+                    for name, xs in lat.items()},
+        "order": order,
+    }
+    fab.close()
+    return out
+
+
+def run_pair(**kw) -> Dict:
+    """static vs closed-loop on the identical wave; the merged
+    ``control.bursty`` record (top-level ``p99_ms`` / ``resize_count``
+    are the check_regression gates)."""
+    static = bursty_replay(False, **kw)
+    closed = bursty_replay(True, **kw)
+    for r in (static, closed):
+        r.pop("order")  # delivery order is test plumbing, not a metric
+    return {
+        "target_ms": TARGET_MS,
+        "static": static,
+        "closed_loop": closed,
+        "static_p99_ms": static["classes"]["interactive"]["p99_ms"],
+        "p99_ms": closed["classes"]["interactive"]["p99_ms"],
+        "resize_count": closed["resize_count"],
+    }

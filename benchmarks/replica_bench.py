@@ -268,7 +268,7 @@ def multihost_scaling(hosts: int, *, items: int = 2400, num_shards: int = 4,
                        if c == name and s % num_shards == shard]
                 assert run == sorted(run), f"{name} run {shard} reordered"
 
-    tp = fab.stats()["transport"]
+    tp = fab.stats_view().transport
     return {
         "hosts": hosts,
         "num_replicas": num_replicas,

@@ -61,7 +61,7 @@ def mixed_workload_latency(policy: str, *, waves: int = 30,
 
     out = {"policy": policy, "waves": waves, "drain_k": drain_k,
            "service_ms": service_s * 1e3, "wall_s": wall, "classes": {},
-           "slo": fab.stats()["slo"]}
+           "slo": fab.stats_view().to_json()["slo"]}
     for name, xs in lat.items():
         out["classes"][name] = {
             "n": len(xs),

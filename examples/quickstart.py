@@ -21,7 +21,7 @@ def main():
         done = fab.drain(max_steps=200)
         for u in uids:
             print(f"req {u}: {done[u].output}")
-        print(f"slo: {fab.stats()['slo']['chat']}")
+        print(f"slo: {fab.stats_view().slo['chat']}")
         assert all(u in done for u in uids)
     print("quickstart OK")
 

@@ -65,21 +65,21 @@ def main():
         print(f"  {name:12s} served={len(served)}/{len(us)} "
               f"preemptions={pre}")
     print(f"  background rejected by admission window: {rejected}")
-    stats = fab.stats()
-    for name, snap in stats["classes"].items():
-        slo = stats["slo"][name]
-        print(f"  [{name}] submitted={snap['submitted']} "
-              f"delivered={snap['delivered']} requeued={snap['requeued']} "
-              f"rejected={snap['rejected']} "
-              f"admit_p99_ms={snap['admit_p99_ms'] and round(snap['admit_p99_ms'], 2)} "
-              f"slo_target_ms={slo['target_ms']} slo_ok={slo['ok']}")
+    view = fab.stats_view()
+    for name, cs in view.classes.items():
+        slo = view.slo[name]
+        print(f"  [{name}] submitted={cs.submitted} "
+              f"delivered={cs.delivered} requeued={cs.requeued} "
+              f"rejected={cs.rejected} "
+              f"admit_p99_ms={cs.admit_p99_ms and round(cs.admit_p99_ms, 2)} "
+              f"slo_target_ms={slo.target_ms} slo_ok={slo.ok}")
     assert all(u in done for us in uids.values() for u in us), \
         "an admitted request was dropped"
     # the SLO view is wired end to end: targets configured on the latency
     # tiers, measured p99 reported against them
-    assert stats["slo"]["interactive"]["target_ms"] == 30000.0
-    assert stats["slo"]["interactive"]["ok"] is not None
-    assert stats["slo"]["background"]["target_ms"] is None
+    assert view.slo["interactive"].target_ms == 30000.0
+    assert view.slo["interactive"].ok is not None
+    assert view.slo["background"].target_ms is None
     pool = fab.engines[0].pool
     print("all admitted requests served; within-class FIFO kept through "
           f"preemption; pages free {pool.free_pages()}/{pool.num_pages}")

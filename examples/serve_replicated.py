@@ -48,7 +48,7 @@ def main():
     fab.step()                      # cadence checkpoint fires (step 2),
     fab.step()
     fab.flush_checkpoints()         # snapshots durably on disk,
-    ck_step = max(fab.stats()["checkpoint"]["written"])
+    ck_step = max(fab.stats_view().checkpoint["written"])
     done_before = dict(fab.completed)
     del fab                         # crash,
 
@@ -66,13 +66,13 @@ def main():
     assert not dup, f"served twice across restore: {dup}"
     print(f"replicas=1->{args.replicas} (live)  wall={dt:.1f}s  "
           f"cadence checkpoint@step {ck_step} ({pending} seats resumed)")
-    stats = fab2.stats()
+    view = fab2.stats_view()
     for name, _ in wave:
         mine = sorted(u for u in uids if tenant_of[u] == name)
-        cs = stats["classes"][name]
+        cs = view.classes[name]
         print(f"  {name:12s} served={sum(1 for u in mine if u in served)}"
-              f"/{len(mine)} requeued-at-seat={cs['requeued']}")
-    for rid, r in stats["replicas"].items():
+              f"/{len(mine)} requeued-at-seat={cs.requeued}")
+    for rid, r in view.replicas.items():
         print(f"  replica {rid}: steals={r['steals']} "
               f"stolen_cycles={r['stolen_cycles']} "
               f"empty_drains={r['empty_drains']}")

@@ -1,0 +1,28 @@
+"""Closed-loop control plane: SLO-driven autoscaling over fabric levers.
+
+DESIGN.md §14. The package is pure policy — it imports nothing from
+``repro.fabric`` (the fabric passes itself in, duck-typed) and actuates
+only through public surfaces: ``Fabric.resize``, ``Fabric.add_host`` and
+the scheduler's live policy weights.
+"""
+
+from repro.control.actions import (Action, GrowHost, Resize, SetPriority,
+                                   SetWeight, action_to_json)
+from repro.control.config import ControlConfig
+from repro.control.controller import Controller, ControlHandle
+from repro.control.signals import ClassSignal, ControlSignals, read_signals
+
+__all__ = [
+    "Action",
+    "ClassSignal",
+    "ControlConfig",
+    "ControlHandle",
+    "ControlSignals",
+    "Controller",
+    "GrowHost",
+    "Resize",
+    "SetPriority",
+    "SetWeight",
+    "action_to_json",
+    "read_signals",
+]

@@ -5,17 +5,38 @@ replicas, and serving (DESIGN.md §10).
     (frozen, validated, JSON round-trip) + the standard
     :func:`tiered_classes` tenant set.
   - :mod:`repro.fabric.session` — :class:`Fabric`: ``open`` / ``submit`` /
-    ``step`` / ``drain`` / ``stats`` / ``snapshot`` / ``restore`` /
+    ``step`` / ``drain`` / ``stats_view`` / ``snapshot`` / ``restore`` /
     ``resize`` (live elasticity) / ``close``, with an in-loop checkpoint
-    cadence for a bounded recovery point.
-  - :mod:`repro.fabric.compat`  — deprecation shims mapping the old
-    hand-wired constructors onto the new API.
+    cadence for a bounded recovery point, the versioned
+    :class:`StatsView` telemetry surface, and the ``fabric.control``
+    actuation handle (DESIGN.md §14).
+  - :mod:`repro.fabric.stats`   — the frozen, versioned stats schema read
+    by the controller, serve.py and the exporters.
 """
 
 from repro.fabric.config import (ClassSpec, FabricConfig, FabricConfigError,
                                  tiered_classes)
 from repro.fabric.session import Fabric
-from repro.fabric import compat  # noqa: F401  (old->new constructor shims)
+from repro.fabric.stats import (SCHEMA_VERSION, ClassStatsView, SloView,
+                                StatsView)
 
-__all__ = ["ClassSpec", "FabricConfig", "FabricConfigError", "Fabric",
-           "compat", "tiered_classes"]
+__all__ = ["ClassSpec", "ClassStatsView", "Fabric", "FabricConfig",
+           "FabricConfigError", "SCHEMA_VERSION", "SloView", "StatsView",
+           "tiered_classes"]
+
+_REMOVED = {
+    "compat": "the repro.fabric.compat shim module",
+    "open_engine": "compat.open_engine",
+    "open_replica_group": "compat.open_replica_group",
+    "open_replica_set": "compat.open_replica_set",
+}
+
+
+def __getattr__(name):
+    # The PR-4 deprecation shims warned for four PRs and are now gone;
+    # fail loudly with the replacement instead of an opaque AttributeError.
+    if name in _REMOVED:
+        raise AttributeError(
+            f"{_REMOVED[name]} was removed in PR 8: construct sessions "
+            f"with Fabric.open(FabricConfig(...)) (see DESIGN.md §10)")
+    raise AttributeError(f"module 'repro.fabric' has no attribute {name!r}")

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.control.config import ControlConfig
 from repro.obs.recorder import ObsConfig
 
 _POLICIES = ("strict", "wfq", "fifo")
@@ -130,8 +131,13 @@ class FabricConfig:
     checkpoint_window: int = 2
     # observability plane (repro.obs): None = no hub, no recorders, zero
     # overhead; an ObsConfig stands up the fabric-wide MetricsHub + flight
-    # recorders (Fabric.stats()["obs"], Fabric.obs exporters)
+    # recorders (stats_view().obs, Fabric.obs exporters)
     obs: Optional[ObsConfig] = None
+    # control plane (repro.control): None = no closed loop (the
+    # fabric.control actuation handle still exists for manual typed
+    # actions); a ControlConfig arms the SLO-driven autoscaler inside
+    # Fabric.step (DESIGN.md §14). Requires obs (its sensor input).
+    control: Optional[ControlConfig] = None
 
     def __post_init__(self):
         # normalize: accept any iterable of ClassSpec (or spec dicts), then
@@ -142,6 +148,8 @@ class FabricConfig:
         object.__setattr__(self, "classes", specs)
         if isinstance(self.obs, dict):  # JSON round-trip form
             object.__setattr__(self, "obs", ObsConfig(**self.obs))
+        if isinstance(self.control, dict):  # JSON round-trip form
+            object.__setattr__(self, "control", ControlConfig(**self.control))
         if self.max_replicas is None:
             object.__setattr__(self, "max_replicas", self.replicas)
         if self.shards_per_class is None:
@@ -260,6 +268,25 @@ class FabricConfig:
                 self.obs.validate()
             except ValueError as e:
                 bad(f"obs: {e}")
+        if self.control is not None and self.control.enabled:
+            try:
+                self.control.validate()
+            except ValueError as e:
+                bad(f"control: {e}")
+            if self.obs is None or not self.obs.enabled:
+                bad("control=ControlConfig(...) needs the obs plane for "
+                    "its signals (the rolling gauge window): also set "
+                    "obs=ObsConfig() — serve.py --autoscale does this "
+                    "automatically")
+            if self.control.min_replicas > self.replicas:
+                bad(f"control.min_replicas={self.control.min_replicas} > "
+                    f"replicas={self.replicas}: the shrink floor cannot "
+                    f"start above the opening replica count")
+            if (self.control.replicas_per_host is not None
+                    and self.transport != "sim"):
+                bad("control.replicas_per_host (grow-a-host preference) "
+                    "requires transport='sim': the local transport is "
+                    "single-host by definition")
 
     # ------------------------------------------------------------------ JSON
     def to_json(self) -> dict:

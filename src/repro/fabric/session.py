@@ -27,10 +27,19 @@ scheduler-only fabric is plain host Python.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro.control import ControlHandle
 from repro.fabric.config import FabricConfig, FabricConfigError
+from repro.fabric.stats import (SloView, StatsView, _json_safe,
+                                class_view_from_snapshot)
 from repro.sched import QueueClass, ReplicaSet, Scheduler, make_transport
+
+# Fabric.stats() (the raw-dict alias of stats_view()) warns once per
+# process, not once per call site — the alias is a migration aid, not a
+# supported surface.
+_STATS_DICT_WARNED = False
 
 
 def _build_classes(config: FabricConfig) -> List[QueueClass]:
@@ -96,6 +105,11 @@ class Fabric:
             from repro.obs import MetricsHub
             self._obs_hub = MetricsHub(config.obs)
             self._obs_hub.attach(self._replica_set, engines=self.engines)
+        # control plane (DESIGN.md §14): the actuation surface is always
+        # present (fabric.control.resize/set_weight/... are the typed way
+        # to pull levers by hand); the closed-loop Controller inside it
+        # exists only when config.control is set and enabled.
+        self._control = ControlHandle(self, config.control)
 
     # ------------------------------------------------------------- lifecycle
     @classmethod
@@ -334,6 +348,12 @@ class Fabric:
                     hub.config.snapshot_path,
                     {"step": self.step_count,
                      "obs": strip_samples(hub.snapshot())})
+        # Closed loop last, so a decision sees this step's depths and the
+        # freshest gauge sample (DESIGN.md §14: signals→decision→actions).
+        ctrl = self._control
+        if (ctrl.controller is not None and
+                self.step_count % ctrl.config.decide_every_n_steps == 0):
+            ctrl.step()
         return out
 
     def drain(self, max_steps: int = 1000):
@@ -390,16 +410,44 @@ class Fabric:
             self._obs_hub.attach(self._replica_set, engines=self.engines)
         return moved
 
+    def add_host(self) -> int:
+        """Grow the simulated host fleet by one (sim transport only); the
+        next :meth:`resize` / reseat spreads seats over the enlarged
+        fleet. Returns the new host count. The control plane's
+        ``GrowHost`` action is ``add_host()`` + ``resize(n)``."""
+        self._check_open()
+        t = self.transport
+        if not hasattr(t, "add_host"):
+            raise FabricConfigError(
+                "add_host(): the local transport is single-host by "
+                "definition — open with transport='sim' to grow hosts")
+        n = t.add_host()
+        if self._obs_hub is not None:
+            self._obs_hub.attach(self._replica_set, engines=self.engines)
+        return n
+
     @property
     def transport(self):
         return self._replica_set.transport
+
+    @property
+    def num_hosts(self) -> int:
+        return self._replica_set.transport.num_hosts
+
+    @property
+    def control(self) -> ControlHandle:
+        """The control plane's actuation surface (DESIGN.md §14): typed
+        signal reads (``fabric.control.signals()``) and typed actions
+        (``.resize/.grow_host/.set_weight/.set_priority/.apply``), plus
+        the closed-loop controller when ``config.control`` is set."""
+        return self._control
 
     @property
     def obs(self):
         """The session's :class:`~repro.obs.MetricsHub` (None when
         ``config.obs`` is unset/disabled) — the exporters' entry point:
         ``perfetto_trace(fabric.obs.events())``,
-        ``prometheus_text(fabric.stats())``."""
+        ``prometheus_text(fabric.stats_view())``."""
         return self._obs_hub
 
     # ------------------------------------------------------------ checkpoint
@@ -436,35 +484,66 @@ class Fabric:
             self._ckpt.drain(timeout)
 
     # ------------------------------------------------------------- telemetry
-    def stats(self) -> dict:
-        """Fabric-wide roll-up: per-class aggregates (via
-        ``aggregate_class_snapshots`` across replicas, continuous across
-        resizes), per-replica steal/idle detail, and the ``"slo"`` view —
+    def stats_view(self) -> StatsView:
+        """The versioned fabric-wide telemetry snapshot (DESIGN.md §14):
+        typed per-class aggregates (via ``aggregate_class_snapshots``
+        across replicas, continuous across resizes) and the ``slo`` view —
         measured per-class ``admit_p99_ms`` against each class's configured
-        ``slo_ms`` target (read-only groundwork for SLO-aware policies)."""
+        ``slo_ms`` target — plus pass-through ``replicas`` / ``transport``
+        / ``checkpoint`` / ``obs`` / ``control`` sections. This is the one
+        schema the controller, serve.py heartbeat and exporters all read;
+        ``view.to_json()`` is the JSON-stable raw form."""
         snap = self._replica_set.snapshot()
+        classes = {}
         slo = {}
         for spec in self.config.classes:
-            p99 = snap["classes"][spec.name]["admit_p99_ms"]
+            cs = snap["classes"][spec.name]
+            classes[spec.name] = class_view_from_snapshot(spec.name, cs)
+            p99 = cs["admit_p99_ms"]
             ok = None if (spec.slo_ms is None or p99 is None) \
                 else p99 <= spec.slo_ms
-            slo[spec.name] = {
-                "target_ms": spec.slo_ms,
-                "admit_p99_ms": p99,
-                "ok": ok,
-                "headroom_ms": (None if spec.slo_ms is None or p99 is None
-                                else spec.slo_ms - p99),
-            }
-        out = {"step": self.step_count, "num_replicas": self.num_replicas,
-               "resizes": self._replica_set.resizes,
-               "classes": snap["classes"], "replicas": snap["replicas"],
-               "transport": snap["transport"], "slo": slo}
+            slo[spec.name] = SloView(
+                target_ms=spec.slo_ms,
+                admit_p99_ms=p99,
+                ok=ok,
+                headroom_ms=(None if spec.slo_ms is None or p99 is None
+                             else spec.slo_ms - p99),
+            )
+        checkpoint = None
         if self._ckpt is not None:
-            out["checkpoint"] = {"written": list(self._ckpt.written),
-                                 "dropped": self._ckpt.dropped}
-        if self._obs_hub is not None:
-            out["obs"] = self._obs_hub.snapshot()
-        return out
+            checkpoint = {"written": list(self._ckpt.written),
+                          "dropped": self._ckpt.dropped}
+        return StatsView(
+            step=self.step_count,
+            num_replicas=self.num_replicas,
+            num_hosts=self.num_hosts,
+            resizes=self._replica_set.resizes,
+            classes=classes,
+            slo=slo,
+            replicas=_json_safe(snap["replicas"]),
+            transport=_json_safe(snap["transport"]),
+            checkpoint=checkpoint,
+            obs=(_json_safe(self._obs_hub.snapshot())
+                 if self._obs_hub is not None else None),
+            control=self._control.snapshot(),
+        )
+
+    def stats(self) -> dict:
+        """Deprecated raw-dict alias of :meth:`stats_view` — exactly
+        ``stats_view().to_json()``. Warns once per process; new code reads
+        the typed view. (Two schema-1 differences from the pre-PR-8 dict:
+        per-class blobs carry ``name`` instead of ``class`` and no longer
+        ship raw ``latency_samples``, and nested section keys are
+        strings.)"""
+        global _STATS_DICT_WARNED
+        if not _STATS_DICT_WARNED:
+            _STATS_DICT_WARNED = True
+            warnings.warn(
+                "Fabric.stats() is deprecated: read the versioned "
+                "Fabric.stats_view() (StatsView, schema_version "
+                f"{StatsView.schema_version}); stats() now returns "
+                "stats_view().to_json()", DeprecationWarning, stacklevel=2)
+        return self.stats_view().to_json()
 
     # -------------------------------------------------------------- internal
     def _check_open(self) -> None:

@@ -1,7 +1,7 @@
 """Serving driver: the whole system — class queues, scheduler replicas,
-engine group, transport, checkpoint cadence — stood up through one
-declarative `FabricConfig` and driven through one `Fabric` session
-(DESIGN.md §10-11).
+engine group, transport, checkpoint cadence, obs plane, autoscaler — stood
+up through one declarative `FabricConfig` and driven through one `Fabric`
+session (DESIGN.md §10-11, §14).
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --requests 8 --max-new 8
@@ -19,11 +19,24 @@ declarative `FabricConfig` and driven through one `Fabric` session
   # wire envelopes), self-asserting delivery equality vs one host:
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --replicas 4 --hosts 2 --verify-single-host
+
+  # closed-loop autoscaling (DESIGN.md §14): start at 1 replica, let the
+  # controller grow toward --max-replicas under load ('--autoscale
+  # dry-run' records decisions without actuating):
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
+      --replicas 1 --max-replicas 4 --autoscale --requests 16
+
+Flag conventions: optional-value flags follow ``--flag [value]`` —
+``--policy [strict|wfq|fifo]`` (bare = wfq), ``--device-admission
+[true|false|auto]`` (bare = true), ``--trace [PATH]`` (bare =
+reports/trace.json), ``--autoscale [dry-run]`` (bare = actuating).
+``--dry-run`` prints the resolved FabricConfig JSON and exits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 TENANTS = ("interactive", "batch", "background")
@@ -43,9 +56,21 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
             or getattr(args, "stats_interval", None)):
         from repro.obs import ObsConfig
         obs = ObsConfig(trace_rate=getattr(args, "trace_rate", 0.01))
+    control = None
+    autoscale = getattr(args, "autoscale", False)
+    max_replicas = getattr(args, "max_replicas", None)
+    if autoscale:
+        from repro.control import ControlConfig
+        control = ControlConfig(dry_run=(autoscale == "dry-run"))
+        if obs is None:  # the controller's sensor input (config.validate
+            from repro.obs import ObsConfig  # enforces obs-with-control)
+            obs = ObsConfig(trace_rate=0.0)
+        if max_replicas is None:  # headroom for the loop to grow into
+            max_replicas = max(args.replicas * 2, hosts)
     return FabricConfig(
-        obs=obs,
-        classes=classes, replicas=args.replicas, policy=args.policy,
+        obs=obs, control=control,
+        classes=classes, replicas=args.replicas, max_replicas=max_replicas,
+        policy=args.policy,
         hosts=hosts, transport="sim" if hosts > 1 else "local",
         arch=args.arch, smoke=args.smoke, params_dir=args.ckpt_dir,
         max_batch=args.max_batch, page_size=args.page_size,
@@ -75,7 +100,7 @@ def run_workload(fab, args):
         order.extend(r.uid for r in fab.step())
         if interval and step % interval == 0:
             from repro.obs import format_class_lines
-            for line in format_class_lines(fab.stats(),
+            for line in format_class_lines(fab.stats_view(),
                                            prefix=f"[serve] step {step}"):
                 print(line)
         if fab.idle():
@@ -89,7 +114,9 @@ def verify_single_host(args, config) -> None:
     host, and assert the runs are indistinguishable to every tenant: same
     admitted requests, token-identical outputs, and the same per-class
     completion order (the host split is a transparent implementation
-    detail of the seat protocol — exactly the tentpole claim)."""
+    detail of the seat protocol — exactly the tentpole claim). With
+    --autoscale, the controller runs in both layouts: per-class delivery
+    order must be controller-invariant too (resize preserves seat order)."""
     import dataclasses
     from repro.fabric import Fabric
     # Throwaway self-test runs: never write (or resume) the user's real
@@ -103,9 +130,14 @@ def verify_single_host(args, config) -> None:
         fab = Fabric.open(cfg)
         uids, tenant_of, done, order = run_workload(fab, args)
         runs[label] = (uids, tenant_of, done, order)
-        print(f"[serve] verify[{label}]: hosts={cfg.hosts} "
-              f"replicas={fab.num_replicas} completed={len(done)} "
-              f"transport={fab.stats()['transport']['kind']}")
+        view = fab.stats_view()
+        line = (f"[serve] verify[{label}]: hosts={cfg.hosts} "
+                f"replicas={fab.num_replicas} completed={len(done)} "
+                f"transport={view.transport['kind']}")
+        if view.control and view.control.get("enabled"):
+            line += (f" control_decisions={view.control['decisions']}"
+                     f" resizes={view.resizes}")
+        print(line)
         fab.close(final_checkpoint=False)
     (u_m, t_m, d_m, o_m), (u_s, t_s, d_s, o_s) = runs["multi"], runs["single"]
     assert u_m == u_s, "admitted request sets diverged across host layouts"
@@ -126,65 +158,107 @@ def verify_single_host(args, config) -> None:
           f"vs hosts=1")
 
 
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="CMP serving fabric driver (one FabricConfig in, one "
+                    "Fabric session out)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the resolved FabricConfig JSON and exit "
+                         "without opening a fabric")
+
+    model = ap.add_argument_group("model")
+    model.add_argument("--arch", default="glm4-9b")
+    model.add_argument("--smoke", action="store_true")
+    model.add_argument("--ckpt-dir", default=None,
+                       help="model-params checkpoint to restore weights "
+                            "from")
+
+    work = ap.add_argument_group("workload")
+    work.add_argument("--requests", type=int, default=8)
+    work.add_argument("--max-new", type=int, default=8)
+    work.add_argument("--multitenant", action="store_true",
+                      help="3 priority classes (interactive/batch/"
+                           "background) instead of one FIFO queue")
+    work.add_argument("--verify-single-host", action="store_true",
+                      help="run the workload under --hosts N and under one "
+                           "host and assert identical per-class delivery "
+                           "order and token-identical outputs (self-test; "
+                           "skips checkpoint resume)")
+
+    fabric = ap.add_argument_group("fabric")
+    fabric.add_argument("--replicas", type=int, default=1,
+                        help="N steal-rebalanced engine replicas (live-"
+                             "resized to this count when resuming a "
+                             "checkpoint)")
+    fabric.add_argument("--max-replicas", type=int, default=None,
+                        help="live-resize ceiling (seats are provisioned "
+                             "at open); defaults to --replicas, or 2x with "
+                             "--autoscale")
+    fabric.add_argument("--hosts", type=int, default=1,
+                        help="spread the replicas over N simulated hosts "
+                             "(host-addressed seats over the sim "
+                             "transport; 1 = in-process local transport)")
+    fabric.add_argument("--policy", nargs="?", const="wfq", default="strict",
+                        choices=("strict", "wfq", "fifo"),
+                        help="cross-class drain policy (with "
+                             "--multitenant); bare --policy = wfq")
+    fabric.add_argument("--device-admission", dest="device_admission",
+                        nargs="?", const=True, default=False,
+                        type=lambda s: {"true": True, "false": False,
+                                        "auto": "auto"}[s.lower()],
+                        help="route engine admission through the device-"
+                             "resident CMP ring (DESIGN.md §12): bare flag "
+                             "forces the ring, 'auto' uses it only on TPU, "
+                             "'false' keeps the host path")
+
+    engine = ap.add_argument_group("engine geometry")
+    engine.add_argument("--max-batch", type=int, default=4)
+    engine.add_argument("--page-size", type=int, default=16)
+    engine.add_argument("--num-pages", type=int, default=128)
+    engine.add_argument("--window", type=int, default=4)
+
+    auto = ap.add_argument_group("autoscale (DESIGN.md §14)")
+    auto.add_argument("--autoscale", nargs="?", const=True, default=False,
+                      metavar="dry-run",
+                      help="arm the closed-loop controller inside "
+                           "Fabric.step (grow/shrink replicas toward "
+                           "--max-replicas on backlog + SLO headroom); "
+                           "'--autoscale dry-run' records decisions "
+                           "without actuating")
+
+    ckpt = ap.add_argument_group("checkpoint")
+    ckpt.add_argument("--checkpoint-dir", default=None,
+                      help="frontier-checkpoint directory: resumes every "
+                           "tenant at its exact FIFO seat if a snapshot "
+                           "exists; one is written at close")
+    ckpt.add_argument("--checkpoint-every", type=int, default=None,
+                      help="also write a frontier snapshot every N engine "
+                           "steps (bounded in-loop recovery point)")
+
+    obs = ap.add_argument_group("observability")
+    obs.add_argument("--trace", nargs="?", const="reports/trace.json",
+                     default=None, metavar="PATH",
+                     help="enable the flight recorder and write a Chrome/"
+                          "Perfetto trace.json after the run (bare flag = "
+                          "reports/trace.json; load at ui.perfetto.dev)")
+    obs.add_argument("--trace-rate", type=float, default=0.01,
+                     help="head-sampling rate for lifecycle tracing "
+                          "(1.0 = every envelope; default 0.01)")
+    obs.add_argument("--metrics-out", default=None, metavar="PATH",
+                     help="write Prometheus text exposition of the final "
+                          "fabric stats to PATH")
+    obs.add_argument("--stats-interval", type=int, default=None, metavar="N",
+                     help="print a per-class stats line every N fabric "
+                          "steps")
+    return ap
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="glm4-9b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--num-pages", type=int, default=128)
-    ap.add_argument("--window", type=int, default=4)
-    ap.add_argument("--ckpt-dir", default=None,
-                    help="model-params checkpoint to restore weights from")
-    ap.add_argument("--multitenant", action="store_true",
-                    help="3 priority classes (interactive/batch/background) "
-                         "instead of one FIFO queue")
-    ap.add_argument("--policy", default="strict",
-                    choices=("strict", "wfq", "fifo"),
-                    help="cross-class drain policy (with --multitenant)")
-    ap.add_argument("--replicas", type=int, default=1,
-                    help="N steal-rebalanced engine replicas (live-resized "
-                         "to this count when resuming a checkpoint)")
-    ap.add_argument("--hosts", type=int, default=1,
-                    help="spread the replicas over N simulated hosts "
-                         "(host-addressed seats over the sim transport; "
-                         "1 = in-process local transport)")
-    ap.add_argument("--device-admission", dest="device_admission",
-                    nargs="?", const=True, default=False,
-                    type=lambda s: {"true": True, "false": False,
-                                    "auto": "auto"}[s.lower()],
-                    help="route engine admission through the device-resident "
-                         "CMP ring (DESIGN.md §12): flag alone forces the "
-                         "ring, 'auto' uses it only on TPU, 'false' keeps "
-                         "the host path")
-    ap.add_argument("--verify-single-host", action="store_true",
-                    help="run the workload under --hosts N and under one "
-                         "host and assert identical per-class delivery "
-                         "order and token-identical outputs (self-test; "
-                         "skips checkpoint resume)")
-    ap.add_argument("--checkpoint-dir", default=None,
-                    help="frontier-checkpoint directory: resumes every "
-                         "tenant at its exact FIFO seat if a snapshot "
-                         "exists; one is written at close")
-    ap.add_argument("--checkpoint-every", type=int, default=None,
-                    help="also write a frontier snapshot every N engine "
-                         "steps (bounded in-loop recovery point)")
-    ap.add_argument("--trace", nargs="?", const="reports/trace.json",
-                    default=None, metavar="PATH",
-                    help="enable the flight recorder and write a Chrome/"
-                         "Perfetto trace.json after the run (default path "
-                         "reports/trace.json; load at ui.perfetto.dev)")
-    ap.add_argument("--trace-rate", type=float, default=0.01,
-                    help="head-sampling rate for lifecycle tracing "
-                         "(1.0 = every envelope; default 0.01)")
-    ap.add_argument("--metrics-out", default=None, metavar="PATH",
-                    help="write Prometheus text exposition of the final "
-                         "fabric stats to PATH")
-    ap.add_argument("--stats-interval", type=int, default=None, metavar="N",
-                    help="print a per-class stats line every N fabric steps")
+    ap = build_parser()
     args = ap.parse_args()
+    if args.autoscale not in (False, True, "dry-run"):
+        ap.error(f"--autoscale takes no value or 'dry-run' "
+                 f"(got {args.autoscale!r})")
     if args.verify_single_host and args.hosts < 2:
         ap.error("--verify-single-host compares a multi-host layout "
                  "against one host; it needs --hosts >= 2 (with --hosts 1 "
@@ -194,6 +268,10 @@ def main() -> None:
         config = config_from_args(args)
     except FabricConfigError as e:
         ap.error(str(e))
+
+    if args.dry_run:
+        print(json.dumps(config.to_json(), indent=2, sort_keys=True))
+        return
 
     if args.verify_single_host:
         verify_single_host(args, config)
@@ -214,6 +292,7 @@ def main() -> None:
                          device_admission=config.device_admission,
                          hosts=config.hosts, transport=config.transport,
                          params_dir=config.params_dir,
+                         obs=config.obs, control=config.control,
                          checkpoint_every_n_steps=(
                              config.checkpoint_every_n_steps))
         try:
@@ -262,26 +341,36 @@ def main() -> None:
     print(f"[serve] {len(uids)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s); fabric steps={fab.step_count}; "
           f"free pages={free}/{total}")
-    stats = fab.stats()
+    view = fab.stats_view()
     if args.hosts > 1:
-        ts = stats["transport"]
+        ts = view.transport
         print(f"[serve] transport: hosts={ts['hosts']} "
               f"remote_msgs={ts['remote_msgs']} "
               f"remote_bytes={ts['remote_bytes']} "
               f"remote_claims={ts['remote_claims']}")
-    if args.replicas > 1:
-        for rid, rs in stats["replicas"].items():
+    if fab.num_replicas > 1 or args.replicas > 1:
+        for rid, rs in view.replicas.items():
             print(f"[serve] replica {rid} (host {rs['host']}): "
                   f"steals={rs['steals']} "
                   f"stolen_cycles={rs['stolen_cycles']} "
                   f"empty_drains={rs['empty_drains']}")
     if args.multitenant:
-        for name, cs in stats["classes"].items():
-            slo = stats["slo"][name]
-            print(f"[serve] class {name}: submitted={cs['submitted']} "
-                  f"requeued={cs['requeued']} p50_ms={cs['admit_p50_ms']} "
-                  f"p99_ms={cs['admit_p99_ms']} "
-                  f"slo_target_ms={slo['target_ms']} slo_ok={slo['ok']}")
+        for name, cs in view.classes.items():
+            slo = view.slo[name]
+            print(f"[serve] class {name}: submitted={cs.submitted} "
+                  f"requeued={cs.requeued} p50_ms={cs.admit_p50_ms} "
+                  f"p99_ms={cs.admit_p99_ms} "
+                  f"slo_target_ms={slo.target_ms} slo_ok={slo.ok}")
+    if args.autoscale:
+        ctl = view.control or {}
+        print(f"[serve] control: decisions={ctl.get('decisions', 0)} "
+              f"applied={ctl.get('applied')} resizes={view.resizes} "
+              f"final_replicas={view.num_replicas} "
+              f"hosts={view.num_hosts} dry_run={ctl.get('dry_run')}")
+        for d in ctl.get("last", []):
+            print(f"[serve]   step {d['step']}: {d['kind']}"
+                  f"{' (dry-run)' if not d['applied'] else ''} — "
+                  f"{d['reason']}")
     if fab.obs is not None:
         from repro.obs import perfetto_trace, prometheus_text, stage_breakdown
         events = fab.obs.events()
@@ -298,7 +387,7 @@ def main() -> None:
             if d:
                 os.makedirs(d, exist_ok=True)
             with open(args.metrics_out, "w") as f:
-                f.write(prometheus_text(stats))
+                f.write(prometheus_text(view))
             print(f"[serve] metrics exposition -> {args.metrics_out}")
     fab.close()  # writes the final frontier snapshot when --checkpoint-dir
     if args.checkpoint_dir:

@@ -17,19 +17,19 @@ from repro.obs.gauges import (flatten_gauges, sample_admission_ring,
                               sample_class_shards, sample_cmp_shard,
                               sample_fabric_gauges, sample_transport)
 from repro.obs.hub import MetricsHub
-from repro.obs.recorder import (CLAIM_BLOCK, COMPLETE, CONTROL_EVENTS,
-                                DECODE, DRAIN, FLUSH, LANE_PREFILL,
-                                LIFECYCLE_STAGES, PRODUCER_RID, REQUEUE,
-                                RESCUE, SEAT, SHARD_ENQUEUE, STEAL, SUBMIT,
-                                WINDOW_ADMIT, FlightRecorder, ObsConfig,
-                                sample_stride)
+from repro.obs.recorder import (CLAIM_BLOCK, COMPLETE, CONTROL,
+                                CONTROL_EVENTS, DECODE, DRAIN, FLUSH,
+                                LANE_PREFILL, LIFECYCLE_STAGES,
+                                PRODUCER_RID, REQUEUE, RESCUE, SEAT,
+                                SHARD_ENQUEUE, STEAL, SUBMIT, WINDOW_ADMIT,
+                                FlightRecorder, ObsConfig, sample_stride)
 
 __all__ = [
     "ObsConfig", "FlightRecorder", "MetricsHub", "sample_stride",
     "LIFECYCLE_STAGES", "CONTROL_EVENTS", "PRODUCER_RID",
     "SUBMIT", "WINDOW_ADMIT", "SHARD_ENQUEUE", "DRAIN", "SEAT",
     "LANE_PREFILL", "DECODE", "COMPLETE",
-    "STEAL", "REQUEUE", "RESCUE", "CLAIM_BLOCK", "FLUSH",
+    "STEAL", "REQUEUE", "RESCUE", "CLAIM_BLOCK", "FLUSH", "CONTROL",
     "perfetto_trace", "prometheus_text", "stage_breakdown",
     "append_jsonl_snapshot", "strip_samples", "format_class_lines",
     "sample_cmp_shard", "sample_class_shards", "sample_admission_ring",

@@ -103,9 +103,12 @@ def stage_breakdown(events: List[tuple]) -> Dict[str, dict]:
     return out
 
 
-def format_class_lines(stats: dict, prefix: str = "[stats]") -> List[str]:
-    """One compact human-readable line per class from a fabric stats dict —
+def format_class_lines(stats, prefix: str = "[stats]") -> List[str]:
+    """One compact human-readable line per class from the fabric stats —
+    a :class:`~repro.fabric.stats.StatsView` or its ``to_json()`` dict —
     the serve.py ``--stats-interval`` heartbeat format."""
+    if hasattr(stats, "to_json"):
+        stats = stats.to_json()
     out = []
     for name, cs in sorted(stats.get("classes", {}).items()):
         slo = stats.get("slo", {}).get(name, {})
@@ -142,14 +145,18 @@ def _prom_name(key: str) -> str:
     return "repro_" + key.replace(".", "_").replace("-", "_")
 
 
-def prometheus_text(stats: dict, gauges: Optional[dict] = None) -> str:
+def prometheus_text(stats, gauges: Optional[dict] = None) -> str:
     """Fabric stats (+ optional gauge sweep) -> Prometheus text exposition.
 
-    Per-class series carry a ``{cls="..."}`` label; everything else
-    flattens to dotted metric names. Counters (monotone totals) are typed
-    ``counter``, the rest ``gauge``.
+    ``stats`` is a :class:`~repro.fabric.stats.StatsView` or its
+    ``to_json()`` dict. Per-class series carry a ``{cls="..."}`` label;
+    everything else flattens to dotted metric names. Counters (monotone
+    totals) are typed ``counter``, the rest ``gauge``.
     """
     from repro.obs.gauges import flatten_gauges
+
+    if hasattr(stats, "to_json"):
+        stats = stats.to_json()
 
     series: List[tuple] = []  # (name, labels, value, prom_type)
 
@@ -162,7 +169,7 @@ def prometheus_text(stats: dict, gauges: Optional[dict] = None) -> str:
     for name, cs in stats.get("classes", {}).items():
         label = f'{{cls="{name}"}}'
         for key, val in cs.items():
-            if key in ("class", "shard_depths", "latency_samples"):
+            if key in ("class", "name", "shard_depths", "latency_samples"):
                 continue
             typ = "counter" if key in _COUNTER_KEYS else "gauge"
             if isinstance(val, (int, float)) and not isinstance(val, bool):

@@ -108,7 +108,7 @@ class MetricsHub:
 
     # ------------------------------------------------------------ snapshot
     def snapshot(self) -> dict:
-        """The ``Fabric.stats()["obs"]`` view: recorder ring health +
+        """The ``Fabric.stats_view().obs`` view: recorder ring health +
         per-stage event totals, RTT percentiles, rolling-window extent,
         and the latest gauge sweep (when one has been taken)."""
         counts: Dict[str, int] = {}

@@ -47,11 +47,13 @@ REQUEUE = "requeue"              # preempted back to its class seat
 RESCUE = "rescue"                # reclaim stole stalled-claimer data (Alg 4)
 CLAIM_BLOCK = "claim_block"      # device-ring fused kernel invocation
 FLUSH = "flush"                  # device-ring checkpoint/resize boundary
+CONTROL = "control"              # control-plane decision (resize/weights)
 
 LIFECYCLE_STAGES: Tuple[str, ...] = (
     SUBMIT, WINDOW_ADMIT, SHARD_ENQUEUE, DRAIN, SEAT,
     LANE_PREFILL, DECODE, COMPLETE)
-CONTROL_EVENTS: Tuple[str, ...] = (STEAL, REQUEUE, RESCUE, CLAIM_BLOCK, FLUSH)
+CONTROL_EVENTS: Tuple[str, ...] = (STEAL, REQUEUE, RESCUE, CLAIM_BLOCK,
+                                   FLUSH, CONTROL)
 
 #: rid used for fabric-global (producer-side / shard-side) rings — events
 #: emitted by code that is not pinned to one replica's drain loop.

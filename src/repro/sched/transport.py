@@ -173,6 +173,14 @@ class Transport:
         recovery move (:meth:`repro.sched.ReplicaSet.fail_host`)."""
         raise NotImplementedError(f"{self.kind} transport cannot fail hosts")
 
+    def add_host(self) -> int:
+        """Grow the host fleet by one; returns the new host count.
+        Data-plane only — replicas spread onto the new host at the next
+        reseat (``ReplicaSet.resize`` recomputes ``addr_of(rid)``)."""
+        raise NotImplementedError(
+            f"{self.kind} transport cannot add hosts (single-host by "
+            f"definition — use transport='sim')")
+
     def stats(self) -> dict:
         raise NotImplementedError
 
@@ -409,6 +417,14 @@ class SimHostTransport(Transport):
         # everything in flight is flushed back into the fabric: in-flight
         # envelopes are addressed to shards, not hosts, so none are lost
         return self._flush_inflight()
+
+    def add_host(self) -> int:
+        # Flush first: ``host_of``/``shard_home`` are modular in num_hosts,
+        # so parked envelopes keyed under the old modulus must land in
+        # their shards before the mapping shifts.
+        self._flush_inflight()
+        self.num_hosts += 1
+        return self.num_hosts
 
     def stats(self) -> dict:
         return {"kind": self.kind, "hosts": self.num_hosts,

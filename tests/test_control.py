@@ -1,0 +1,314 @@
+"""Closed-loop control plane (DESIGN.md §14): the pure Controller decision
+function on synthetic signals (no-oscillation, cooldown spacing, bounded
+weight nudges, GrowHost preference), the Fabric.control handle (typed
+actions, dry-run, obs control events, stats_view().control), ControlConfig
+validation + JSON round-trip, and the end-to-end bursty replay asserting
+delivery exactness is controller-invariant."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.control import (ControlConfig, Controller, GrowHost, Resize,
+                           SetWeight)
+from repro.control.signals import ClassSignal, ControlSignals
+from repro.fabric import ClassSpec, Fabric, FabricConfig, FabricConfigError
+from repro.obs import ObsConfig
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
+
+
+# ---------------------------------------------------------------------------
+# synthetic signals: drive the pure Controller without a fabric
+# ---------------------------------------------------------------------------
+
+
+def _sig(step, *, n=2, max_n=4, backlog=0.0, delivered=0, capacity=None,
+         hosts=1, transport="local", policy="strict", trend=None,
+         classes=()):
+    pending = int(backlog * n)
+    return ControlSignals(
+        step=step, num_replicas=n, max_replicas=max_n, num_hosts=hosts,
+        transport_kind=transport, policy=policy, pending_total=pending,
+        backlog_per_replica=backlog, pending_trend=trend,
+        delivered_total=delivered,
+        capacity_per_step=capacity if capacity is not None else 8.0 * n,
+        classes=tuple(classes))
+
+
+def _cls(name, *, weight=1.0, base=1.0, target=None, p99=None, pending=0):
+    headroom = (target - p99) if (target is not None
+                                  and p99 is not None) else None
+    return ClassSignal(name=name, pending=pending, weight=weight,
+                       base_weight=base, priority=0, slo_target_ms=target,
+                       admit_p99_ms=p99, headroom_ms=headroom)
+
+
+def test_steady_overload_walks_to_ceiling_then_stops():
+    """Hysteresis + deadband: a steady out-of-band signal causes a
+    monotone walk to the matching bound, never an oscillation."""
+    ctl = Controller(ControlConfig(hysteresis_up=1, resize_cooldown=2))
+    n, kinds = 1, []
+    for step in range(40):
+        acts = ctl.decide(_sig(step, n=n, backlog=20.0,
+                               delivered=8 * step))
+        for a in acts:
+            assert isinstance(a, Resize) and a.replicas > n  # grows only
+            kinds.append(a.replicas)
+            n = a.replicas
+    assert n == 4 and kinds == sorted(kinds), "walk was not monotone"
+    assert kinds == [2, 4], "did not stop at the ceiling"
+
+
+def test_steady_inband_signal_never_acts():
+    ctl = Controller(ControlConfig(grow_backlog=8.0, shrink_backlog=2.0))
+    for step in range(50):  # inside the deadband: silence forever
+        assert ctl.decide(_sig(step, n=2, backlog=5.0,
+                               delivered=16 * step)) == []
+
+
+def test_steady_idle_shrinks_to_floor_then_stops():
+    ctl = Controller(ControlConfig(hysteresis_down=3, resize_cooldown=1,
+                                   min_replicas=1))
+    n, sizes = 4, []
+    for step in range(40):
+        # nearly no traffic: rate ~0 fits any smaller fleet
+        acts = ctl.decide(_sig(step, n=n, backlog=0.0, delivered=step))
+        for a in acts:
+            assert isinstance(a, Resize) and a.replicas == n - 1
+            sizes.append(a.replicas)
+            n = a.replicas
+    assert n == 1 and sizes == [3, 2, 1], "shrink walk not additive/monotone"
+
+
+def test_full_load_with_empty_endofstep_backlog_never_shrinks():
+    """The throughput guard: end-of-step depth is ~0 when capacity covers
+    arrivals, but a delivery rate that would overfill a smaller fleet
+    must hold the current size (the capacity-level oscillation fix)."""
+    ctl = Controller(ControlConfig(hysteresis_down=1, resize_cooldown=1,
+                                   shrink_fill_frac=0.8))
+    for step in range(30):  # rate = 30/step vs smaller-fleet budget 24
+        assert ctl.decide(_sig(step, n=4, backlog=0.0, capacity=32.0,
+                               delivered=30 * step)) == []
+
+
+def test_resize_cooldown_spacing_respected():
+    cool = 4
+    ctl = Controller(ControlConfig(hysteresis_up=1, resize_cooldown=cool))
+    ticks = []
+    n = 1
+    for step in range(20):
+        acts = ctl.decide(_sig(step, n=n, max_n=64, backlog=50.0,
+                               delivered=step))
+        if acts:
+            ticks.append(step)
+            n = acts[0].replicas
+    assert ticks, "permanent overload produced no grows"
+    gaps = [b - a for a, b in zip(ticks, ticks[1:])]
+    assert all(g >= cool for g in gaps), f"cooldown violated: gaps {gaps}"
+    assert len(ticks) <= 20 // cool + 1  # decisions / cooldown bound
+
+
+def test_weight_nudges_bounded_and_decay_back():
+    cfg = ControlConfig(weight_step=2.0, weight_max_boost=4.0,
+                        weight_cooldown=1, nudge_weights=True)
+    ctl = Controller(cfg)
+    base, w = 1.5, 1.5
+    for step in range(10):  # persistent breach with backlog: boost
+        acts = ctl.decide(_sig(
+            step, n=1, max_n=1,  # resize impossible: weight lever only
+            policy="wfq", backlog=4.0, delivered=step,
+            classes=[_cls("chat", weight=w, base=base, target=5.0,
+                          p99=50.0)]))
+        for a in acts:
+            assert isinstance(a, SetWeight)
+            assert a.weight <= base * cfg.weight_max_boost + 1e-9
+            assert a.weight >= w  # boosting, never below current
+            w = a.weight
+    assert w == pytest.approx(base * cfg.weight_max_boost)
+    for step in range(10, 25):  # recovered: decay toward declared weight
+        acts = ctl.decide(_sig(
+            step, n=1, max_n=1, policy="wfq", backlog=0.0, delivered=step,
+            classes=[_cls("chat", weight=w, base=base, target=5.0,
+                          p99=0.1)]))
+        for a in acts:
+            assert base - 1e-9 <= a.weight <= w
+            w = a.weight
+    assert w == pytest.approx(base), "weight did not decay to declared"
+
+
+def test_weight_nudges_require_wfq():
+    ctl = Controller(ControlConfig(weight_cooldown=1))
+    acts = ctl.decide(_sig(0, policy="strict", backlog=4.0,
+                           classes=[_cls("chat", target=5.0, p99=50.0)]))
+    assert not any(isinstance(a, SetWeight) for a in acts)
+
+
+def test_growhost_preferred_past_replica_per_host_ceiling():
+    ctl = Controller(ControlConfig(hysteresis_up=1, replicas_per_host=2))
+    [act] = ctl.decide(_sig(0, n=2, max_n=8, backlog=50.0, hosts=1,
+                            transport="sim"))
+    assert isinstance(act, GrowHost) and act.replicas == 4
+    assert "host" in act.reason
+    # same pressure on the local transport can only pack replicas
+    ctl2 = Controller(ControlConfig(hysteresis_up=1, replicas_per_host=2))
+    [act2] = ctl2.decide(_sig(0, n=2, max_n=8, backlog=50.0, hosts=1,
+                              transport="local"))
+    assert isinstance(act2, Resize)
+
+
+# ---------------------------------------------------------------------------
+# config: validation + JSON round trip through FabricConfig
+# ---------------------------------------------------------------------------
+
+
+def _controlled_config(**ctl_kw):
+    return FabricConfig(
+        classes=(ClassSpec("hi", priority=1, weight=4.0, slo_ms=50.0),
+                 ClassSpec("lo", priority=0, weight=1.0)),
+        shards_per_class=4, replicas=1, max_replicas=4, queue_window=1024,
+        drain_k=8, obs=ObsConfig(trace_rate=0.0, sample_every_n_steps=1),
+        control=ControlConfig(**ctl_kw))
+
+
+def test_control_config_validation_errors():
+    with pytest.raises(ValueError, match="deadband"):
+        ControlConfig(grow_backlog=2.0, shrink_backlog=2.0).validate()
+    with pytest.raises(ValueError, match="shrink_fill_frac"):
+        ControlConfig(shrink_fill_frac=0.0).validate()
+    with pytest.raises(ValueError, match="weight_step"):
+        ControlConfig(weight_step=1.0).validate()
+    with pytest.raises(FabricConfigError, match="obs"):
+        FabricConfig(classes=(ClassSpec("a"),), shards_per_class=2,
+                     control=ControlConfig())
+    with pytest.raises(FabricConfigError, match="min_replicas"):
+        _controlled_config(min_replicas=2)
+    with pytest.raises(FabricConfigError, match="sim"):
+        _controlled_config(replicas_per_host=2)
+
+
+def test_control_config_json_roundtrip_through_fabric_config():
+    cfg = _controlled_config(dry_run=True, grow_backlog=5.0,
+                             replicas_per_host=None, weight_step=1.5)
+    wire = json.loads(json.dumps(cfg.to_json()))
+    back = FabricConfig.from_json(wire)
+    assert back == cfg and back.control == cfg.control
+    assert isinstance(back.control, ControlConfig)
+
+
+# ---------------------------------------------------------------------------
+# Fabric.control: the actuation handle on a live fabric
+# ---------------------------------------------------------------------------
+
+
+def _burst(fab, per_class=30):
+    for name in ("hi", "lo"):
+        fab.submit_many([(name, i) for i in range(per_class)], qclass=name)
+
+
+def test_handle_typed_signals_and_manual_actions():
+    fab = Fabric.open(_controlled_config(enabled=False))
+    _burst(fab)
+    sig = fab.control.signals()
+    assert sig.num_replicas == 1 and sig.pending_total == 60
+    assert sig.cls("hi").slo_target_ms == 50.0
+    assert fab.control.resize(2, reason="operator")  # manual lever
+    assert fab.num_replicas == 2
+    assert fab.control.decisions[-1]["kind"] == "resize"
+    assert fab.control.decisions[-1]["reason"] == "operator"
+    fab.drain()
+    fab.close()
+
+
+def test_closed_loop_grows_and_logs_obs_control_events():
+    fab = Fabric.open(_controlled_config(
+        decide_every_n_steps=1, grow_backlog=4.0, resize_cooldown=2))
+    _burst(fab, per_class=60)
+    for _ in range(6):
+        fab.step()
+    assert fab.num_replicas > 1, "controller never grew under backlog"
+    view = fab.stats_view()
+    assert view.control["enabled"] and view.control["decisions"] > 0
+    assert view.control["applied"]["resize"] >= 1
+    # every decision is also an obs control event with the reason payload
+    from repro.obs.recorder import CONTROL
+    events = [e for e in fab.obs.events() if e[1] == CONTROL]
+    assert len(events) == len(fab.control.decisions)
+    assert all("reason" in e[6] and e[6]["applied"] for e in events)
+    fab.drain()
+    fab.close()
+
+
+def test_dry_run_records_decisions_but_actuates_nothing():
+    fab = Fabric.open(_controlled_config(
+        dry_run=True, decide_every_n_steps=1, grow_backlog=4.0))
+    _burst(fab, per_class=60)
+    for _ in range(8):
+        fab.step()
+    assert fab.num_replicas == 1, "dry-run resized the fabric"
+    assert len(fab.control.decisions) > 0, "dry-run recorded no decisions"
+    assert all(not d["applied"] for d in fab.control.decisions)
+    assert all(v == 0 for v in fab.control.applied.values())
+    view = fab.stats_view()
+    assert view.control["dry_run"] and view.resizes == 0
+    fab.drain()
+    fab.close()
+
+
+def test_closed_loop_weight_nudges_stay_bounded_on_live_fabric():
+    cfg = FabricConfig(
+        classes=(ClassSpec("hi", priority=1, weight=4.0, slo_ms=1e-9),
+                 ClassSpec("lo", priority=0, weight=1.0)),
+        shards_per_class=4, replicas=1, max_replicas=1, policy="wfq",
+        queue_window=1024, drain_k=4,
+        obs=ObsConfig(trace_rate=0.0, sample_every_n_steps=1),
+        control=ControlConfig(decide_every_n_steps=1, weight_cooldown=1,
+                              weight_step=2.0, weight_max_boost=4.0))
+    fab = Fabric.open(cfg)  # slo_ms=1e-9: "hi" breaches forever
+    _burst(fab, per_class=200)
+    hi = fab.replica_set.scheduler.by_name["hi"]
+    seen = []
+    for _ in range(12):
+        fab.step()
+        seen.append(hi.weight)
+    assert max(seen) <= 4.0 * 4.0 + 1e-9, "nudge exceeded max boost"
+    assert min(seen) >= 4.0 - 1e-9, "nudge dropped under declared weight"
+    assert max(seen) > 4.0, "breach never boosted the weight"
+    fab.drain()
+    fab.close()
+
+
+# ---------------------------------------------------------------------------
+# end to end: the bursty replay is controller-invariant on delivery order
+# ---------------------------------------------------------------------------
+
+
+def test_bursty_replay_delivery_exactness_is_controller_invariant():
+    """The acceptance bar: the fabric's delivery invariant — every class
+    delivered exactly once, every shard cycle-run (seq mod shards) in
+    order — holds identically with the autoscaler actuating (resizes
+    firing mid-wave) and on the dry-run (static) fabric. Scaling changes
+    *when* seats drain, never *which seat comes next* within a shard."""
+    from benchmarks.control_bench import bursty_replay
+    live = bursty_replay(True, quiet_waves=4, burst_waves=16, cool_waves=12)
+    shadow = bursty_replay(False, dry_run=True, quiet_waves=4,
+                           burst_waves=16, cool_waves=12)
+    assert live["resize_count"] >= 1, "burst never triggered a resize"
+    assert shadow["resize_count"] == 0 and shadow["decisions"] > 0
+    assert set(live["order"]) == {"interactive", "batch", "background"}
+    shards = live["shards_per_class"]
+    for name, stream in live["order"].items():
+        # exactly the same multiset of seats as the static run delivered
+        assert sorted(stream) == sorted(shadow["order"][name]), (
+            f"{name}: controller lost or duplicated seats")
+        assert sorted(stream) == list(range(len(stream))), (
+            f"{name}: delivery not exactly-once")
+        for shard in range(shards):
+            run = [s for s in stream if s % shards == shard]
+            assert run == sorted(run), (
+                f"{name} shard {shard}: cycle-run reordered by a resize")
+    # the static fabric (1 replica) delivers each class in dense seq order
+    for name, stream in shadow["order"].items():
+        assert stream == sorted(stream)

@@ -1,8 +1,8 @@
 """The fabric session API (DESIGN.md §10): FabricConfig validation + JSON
 round-trip, scheduler-only and serving sessions, live resize FIFO
 preservation (incl. under concurrent producers), snapshot/restore through
-Fabric, the in-loop checkpoint cadence, the SLO stats view, and the
-deprecation shims."""
+Fabric, the in-loop checkpoint cadence, the versioned StatsView, and the
+fail-loud removal of the pre-Fabric compat shims."""
 
 import argparse
 import json
@@ -11,7 +11,7 @@ import threading
 import pytest
 
 from repro.fabric import (ClassSpec, Fabric, FabricConfig, FabricConfigError,
-                          compat, tiered_classes)
+                          StatsView, tiered_classes)
 
 # ---------------------------------------------------------------------------
 # FabricConfig: validation + JSON round trip
@@ -215,7 +215,7 @@ def test_resize_carries_policy_held_heads():
             f"{name}: policy-held head lost across resize"
         # a carried head is a relocation, not a preemption: the requeued
         # telemetry must not be inflated by the resize
-        assert fab.stats()["classes"][name]["requeued"] == 0
+        assert fab.stats_view().classes[name].requeued == 0
 
 
 def test_snapshot_restore_through_fabric_is_equivalent():
@@ -308,13 +308,13 @@ def test_stats_slo_view():
     for name in ("fast", "slow", "untargeted"):
         fab.submit_many([(name, i) for i in range(10)], qclass=name)
     fab.drain()
-    slo = fab.stats()["slo"]
-    assert slo["fast"]["target_ms"] == 1e7 and slo["fast"]["ok"] is True
-    assert slo["fast"]["headroom_ms"] > 0
-    assert slo["slow"]["ok"] is False and slo["slow"]["headroom_ms"] < 0
-    assert slo["untargeted"]["target_ms"] is None
-    assert slo["untargeted"]["ok"] is None
-    assert slo["untargeted"]["admit_p99_ms"] is not None
+    slo = fab.stats_view().slo
+    assert slo["fast"].target_ms == 1e7 and slo["fast"].ok is True
+    assert slo["fast"].headroom_ms > 0
+    assert slo["slow"].ok is False and slo["slow"].headroom_ms < 0
+    assert slo["untargeted"].target_ms is None
+    assert slo["untargeted"].ok is None
+    assert slo["untargeted"].admit_p99_ms is not None
 
 
 def test_stats_survive_resize():
@@ -322,14 +322,14 @@ def test_stats_survive_resize():
     fab.submit_many([("hi", i) for i in range(40)], qclass="hi")
     for _ in range(3):
         fab.step()
-    before = fab.stats()["classes"]["hi"]["delivered"]
+    before = fab.stats_view().classes["hi"].delivered
     assert before > 0
     fab.resize(4)
-    after = fab.stats()["classes"]["hi"]
-    assert after["delivered"] >= before, "delivered counter reset by resize"
-    assert after["admit_p99_ms"] is not None, "latency reservoir lost"
+    after = fab.stats_view().classes["hi"]
+    assert after.delivered >= before, "delivered counter reset by resize"
+    assert after.admit_p99_ms is not None, "latency reservoir lost"
     fab.drain()
-    assert fab.stats()["classes"]["hi"]["delivered"] == 40
+    assert fab.stats_view().classes["hi"].delivered == 40
 
 
 def test_closed_fabric_refuses_work():
@@ -354,7 +354,7 @@ def test_schedonly_cadence_checkpoint_restores_exact(tmp_path):
         for v, env in fab.step():
             streams[v.name].append(env.seq)
     fab.flush_checkpoints()
-    assert fab.stats()["checkpoint"]["written"] == [2, 4]
+    assert fab.stats_view().checkpoint["written"] == [2, 4]
     del fab  # killed: no close(), the cadence snapshot is the recovery truth
 
     fab2 = Fabric.restore(ck)
@@ -463,27 +463,71 @@ def test_serving_fabric_multihost_host_loss(model):
     done = fab.drain(max_steps=300)
     assert set(done) >= set(uids), "request lost across host failure"
     assert len(done) == len(set(done)), "request served twice"
-    assert fab.stats()["transport"]["dead_hosts"] == [1]
+    assert fab.stats_view().transport["dead_hosts"] == [1]
     fab.close()
 
 
-def test_compat_shims_warn_and_work(model):
-    mcfg, params = model
-    from repro.sched import QueueClass
-    with pytest.warns(DeprecationWarning, match="FabricConfig"):
-        fab = compat.open_replica_set(
-            [QueueClass("a", num_shards=2, window=256),
-             QueueClass("b", priority=1, num_shards=2, window=256)],
-            num_replicas=2)
-    fab.submit_many([("a", i) for i in range(20)], qclass="a")
-    assert sorted(e.seq for _, e in fab.drain()) == list(range(20))
+def test_compat_shims_removed_fail_loudly():
+    """ISSUE satellite: the PR-5 deprecation shims are gone — touching any
+    of them raises with the replacement named, instead of a warning."""
+    import repro.fabric as fabric_pkg
+    for gone in ("compat", "open_replica_set", "open_engine",
+                 "open_replica_group"):
+        with pytest.raises(AttributeError, match="Fabric.open"):
+            getattr(fabric_pkg, gone)
+    # the module file itself is gone, not just unexported
+    with pytest.raises(ImportError):
+        import repro.fabric.compat  # noqa: F401
 
-    with pytest.warns(DeprecationWarning, match="FabricConfig"):
-        fab2 = compat.open_engine(mcfg, params, max_batch=2, page_size=8,
-                                  num_pages=16, window=2, max_seq=32)
-    u = fab2.submit([1, 2, 3], max_new_tokens=2)
-    done = fab2.drain(max_steps=100)
-    assert u in done and len(done[u].output) == 2
+
+# ---------------------------------------------------------------------------
+# versioned StatsView (ISSUE satellite): exact round trip, one-time warning
+# ---------------------------------------------------------------------------
+
+
+def _busy_fabric():
+    fab = Fabric.open(_two_class_config(replicas=2, max_replicas=4,
+                                        transport="sim", hosts=2))
+    for name in ("hi", "lo"):
+        fab.submit_many([(name, i) for i in range(30)], qclass=name)
+    fab.step()
+    fab.resize(3)
+    fab.step()
+    return fab
+
+
+def test_stats_view_json_roundtrip_exact():
+    fab = _busy_fabric()
+    view = fab.stats_view()
+    assert isinstance(view, StatsView) and view.schema_version == 1
+    assert view.num_replicas == 3 and view.resizes == 1
+    assert view.classes["hi"].delivered > 0
+    # exact round trip, including through a JSON wire encode/decode
+    assert StatsView.from_json(view.to_json()) == view
+    wire = json.loads(json.dumps(view.to_json()))
+    assert StatsView.from_json(wire) == view
+    with pytest.raises(ValueError, match="schema_version"):
+        StatsView.from_json({**view.to_json(), "schema_version": 99})
+    fab.close()
+
+
+def test_stats_dict_alias_warns_exactly_once():
+    """The raw-dict ``stats()`` is a deprecated alias for
+    ``stats_view().to_json()`` and warns once per process, not per call."""
+    import warnings
+
+    import repro.fabric.session as session
+    fab = _busy_fabric()
+    session._STATS_DICT_WARNED = False
+    try:
+        with pytest.warns(DeprecationWarning, match="stats_view"):
+            first = fab.stats()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # a second warning would raise
+            second = fab.stats()
+    finally:
+        session._STATS_DICT_WARNED = True  # leave quiet for other tests
+    assert first == fab.stats_view().to_json() == second
 
 
 # ---------------------------------------------------------------------------

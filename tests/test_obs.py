@@ -179,7 +179,7 @@ def test_prometheus_text_is_well_formed():
     hub = fab.obs
     hub.sample(fab.replica_set, fab.engines)
     gauges = hub.window()[-1][1]
-    text = prometheus_text(fab.stats(), gauges=gauges)
+    text = prometheus_text(fab.stats_view(), gauges=gauges)
     types, samples = _parse_prometheus(text)
     assert samples > 20
     assert types["repro_class_submitted"] == "counter"
@@ -197,11 +197,11 @@ def test_strip_samples_removes_reservoirs_deeply():
 def test_format_class_lines_handles_missing_latency():
     from repro.fabric import Fabric, FabricConfig
     fab = Fabric.open(FabricConfig())
-    lines = format_class_lines(fab.stats())
+    lines = format_class_lines(fab.stats_view())
     assert len(lines) == 1 and "p50_ms=-" in lines[0]
     fab.submit_many(list(range(4)))
     fab.drain()
-    [line] = format_class_lines(fab.stats())
+    [line] = format_class_lines(fab.stats_view())
     assert "submitted=4" in line and "delivered=4" in line
 
 
@@ -224,7 +224,7 @@ def test_hub_attach_traces_scheduler_fabric_end_to_end():
             "drain", "seat"} <= {e[1] for e in evs}
     # merged stream is time-sorted across all rings
     assert all(a[0] <= b[0] for a, b in zip(evs, evs[1:]))
-    snap = fab.stats()["obs"]
+    snap = fab.stats_view().obs
     assert snap["trace_rate"] == 1.0
     assert sum(snap["events_total"].values()) >= 5 * 40
     assert snap["window"]["samples"] >= 1  # cadenced gauge sweeps ran

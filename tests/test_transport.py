@@ -131,7 +131,7 @@ def test_sim_chaos_preserves_exact_order():
     _wave(fab, per_class)
     streams = _drain_streams(fab, per_class)
     _assert_exact(streams, per_class)
-    ts = fab.stats()["transport"]
+    ts = fab.stats_view().transport
     assert ts["drops"] > 0 and ts["delayed"] > 0 and ts["reordered"] > 0
     assert ts["remote_bytes"] > 0  # the cross-host hops were serialized
 
@@ -155,7 +155,7 @@ def test_schedonly_codec_hooks_preserve_payload_types():
         payloads.extend(env.payload for _, env in fab.step())
     assert all(isinstance(p, tuple) for p in payloads), \
         "payload type lost on a cross-host hop"
-    assert fab.stats()["transport"]["remote_msgs"] > 0
+    assert fab.stats_view().transport["remote_msgs"] > 0
 
 
 def test_steal_is_one_claim_rpc_through_the_transport():
