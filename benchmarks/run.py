@@ -306,7 +306,8 @@ def bench_replica(full: bool, out_path: str = "BENCH_queue.json") -> None:
     "replica"."""
     from benchmarks.replica_bench import (live_resize, multihost_scaling,
                                           recovery_roundtrip,
-                                          replica_scaling)
+                                          replica_scaling, wire_comparison,
+                                          wire_scaling)
 
     items = 4800 if full else 2400
     result = {"scaling": {}, "straggler": {}, "recovery": {},
@@ -360,6 +361,28 @@ def bench_replica(full: bool, out_path: str = "BENCH_queue.json") -> None:
           f"idle_frac={loss['idle_frac']:.3f},"
           f"seats_recovered={loss['seats_recovered']},"
           f"drops={loss['drops']}")
+
+    # Real wire transport (DESIGN.md §15): drains over per-host worker
+    # processes at injected RTTs bracketing the acceptance range, plus
+    # the gated sim-parity / credit-speedup ratios. The comparison uses
+    # the SAME sizes as --quick so both lanes merge-write one
+    # replica.wire measurement into the committed baseline.
+    result["wire"] = {"scaling": {}}
+    for rtt in (0.1, 1.0):
+        r = wire_scaling(2, items=items // 2, rtt_ms=rtt)
+        result["wire"]["scaling"][f"rtt_{rtt}"] = r
+        _emit(f"replica/wire/rtt_{rtt}ms", 1e6 / r["items_per_sec"],
+              f"items_per_sec={r['items_per_sec']:.0f},"
+              f"idle_frac={r['idle_frac']:.3f},"
+              f"remote_msgs={r['remote_msgs']},"
+              f"fetch_timeouts={r['fetch_timeouts']}")
+    wcmp = wire_comparison(items=800, rtt_ms=0.5, hosts=2)
+    result["wire"].update(wcmp)
+    _emit("replica/wire/comparison", 1e6 / wcmp["wire_items_per_sec"],
+          f"vs_sim_ratio={wcmp['vs_sim_ratio']:.2f},"
+          f"credit_speedup={wcmp['credit_speedup']:.2f},"
+          f"sim={wcmp['sim_items_per_sec']:.0f}/s,"
+          f"wire={wcmp['wire_items_per_sec']:.0f}/s")
 
     # Persist first (a flaky sanity check must not discard the run's data).
     _merge_bench_json(out_path, {"replica": result})
@@ -542,6 +565,19 @@ def bench_quick(out_path: str = "BENCH_queue.json") -> None:
     _emit("quick/replica/elasticity",
           sum(ela["resize_ms"].values()) * 1e3,
           ",".join(f"{k}_ms={v:.2f}" for k, v in ela["resize_ms"].items()))
+    # real wire transport parity + prefetch credit (DESIGN.md §15) — the
+    # same call as the replica section (sizes must match: quick and the
+    # section merge-write the same replica.wire keys, and both ratios are
+    # gated by check_regression.py)
+    from benchmarks.replica_bench import wire_comparison
+    wcmp = wire_comparison(items=800, rtt_ms=0.5, hosts=2)
+    assert wcmp["exact_order"], "wire transport lost or reordered seats"
+    result["replica"]["wire"] = wcmp
+    _emit("quick/replica/wire", 1e6 / wcmp["wire_items_per_sec"],
+          f"vs_sim_ratio={wcmp['vs_sim_ratio']:.2f},"
+          f"credit_speedup={wcmp['credit_speedup']:.2f},"
+          f"sim={wcmp['sim_items_per_sec']:.0f}/s,"
+          f"wire={wcmp['wire_items_per_sec']:.0f}/s")
     # observability overhead (DESIGN.md §13): traced-at-0.01 vs obs-off
     # fabric throughput — a same-machine ratio, gated near 1.0. Same
     # items/rounds as `--only obs`: quick and the section merge-write the

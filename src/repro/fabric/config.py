@@ -61,12 +61,21 @@ class FabricConfig:
       hosts: transport hosts the replicas spread over (round-robin,
         ``rid % hosts``). 1 = single-host; >1 requires the sim transport.
       transport: seat-protocol transport — local (in-process, zero-copy) |
-        sim (N simulated hosts, serialized wire envelopes, chaos knobs).
+        sim (N simulated hosts, serialized wire envelopes, chaos knobs) |
+        wire (N real host worker processes over TCP sockets, DESIGN.md
+        §15: framed wire codec, batched claim frames, prefetch credit).
       transport_drop / transport_delay / transport_reorder /
-      transport_seed: sim-transport chaos — message-drop and in-flight
-        delay probabilities, batch reordering, and the deterministic seed.
+      transport_seed: transport chaos — message-drop and in-flight
+        delay probabilities, batch reordering (sim only; TCP cannot
+        reorder within a connection), and the deterministic seed.
         Order/exactness are transport-chaos-invariant (the seat cursor
         drives delivery); only latency pays.
+      transport_rtt_ms: deterministic injected round-trip time charged to
+        every seat-protocol op (sim: a sleep per op — the wire bench's
+        sim-at-RTT baseline; wire: a server-side response delay that
+        pipelined fetches overlap). 0 = no injection.
+      transport_credit: wire-transport prefetch credit — fetches kept in
+        flight per home shard (1 = synchronous fetch, no look-ahead).
       max_replicas: live-resize ceiling — seats are provisioned per class at
         open (one shard per potential replica), so ``Fabric.resize(n)`` up
         to this count needs no re-shard. Defaults to ``replicas``.
@@ -109,6 +118,8 @@ class FabricConfig:
     transport_delay: float = 0.0
     transport_reorder: bool = False
     transport_seed: int = 0
+    transport_rtt_ms: float = 0.0
+    transport_credit: int = 4
     policy: str = "strict"
     queue_window: int = 4096
     reclaim_period: int = 32
@@ -197,29 +208,40 @@ class FabricConfig:
                 f"{self.max_replicas}: every replica needs at least one "
                 f"seat per class — raise shards_per_class or lower "
                 f"max_replicas")
-        if self.transport not in ("local", "sim"):
+        if self.transport not in ("local", "sim", "wire"):
             bad(f"unknown transport {self.transport!r}; choose from "
-                f"['local', 'sim']")
+                f"['local', 'sim', 'wire']")
         if self.hosts < 1:
             bad(f"hosts must be >= 1 (got {self.hosts})")
         if self.transport == "local" and self.hosts != 1:
             bad(f"hosts={self.hosts} with the local transport: the local "
                 f"transport is single-host by definition — set "
-                f"transport='sim' for multi-host layouts")
+                f"transport='sim' or 'wire' for multi-host layouts")
         if self.hosts > self.max_replicas:
             bad(f"hosts={self.hosts} > max_replicas={self.max_replicas}: "
                 f"a host with no replica drains nothing — raise "
                 f"max_replicas or lower hosts")
         if self.transport == "local" and (
                 self.transport_drop or self.transport_delay
-                or self.transport_reorder):
-            bad("transport chaos knobs (transport_drop/delay/reorder) "
-                "require transport='sim': the local transport has no wire "
-                "to be lossy on")
+                or self.transport_reorder or self.transport_rtt_ms):
+            bad("transport chaos knobs (transport_drop/delay/reorder/"
+                "rtt_ms) require transport='sim' or 'wire': the local "
+                "transport has no wire to be lossy on")
+        if self.transport == "wire" and self.transport_reorder:
+            bad("transport_reorder requires transport='sim': the wire "
+                "transport's per-connection TCP framing delivers responses "
+                "in order by construction")
         for knob in ("transport_drop", "transport_delay"):
             p = getattr(self, knob)
             if not (0.0 <= p < 1.0):
                 bad(f"{knob} must be in [0, 1) (got {p})")
+        if not (0.0 <= self.transport_rtt_ms < 10_000.0):
+            bad(f"transport_rtt_ms must be in [0, 10000) "
+                f"(got {self.transport_rtt_ms})")
+        if self.transport_credit < 1:
+            bad(f"transport_credit must be >= 1 "
+                f"(got {self.transport_credit}); credit is the number of "
+                f"fetches kept in flight — 1 means synchronous")
         for field, lo in (("queue_window", 1), ("reclaim_period", 1),
                           ("min_steal", 1), ("drain_k", 1),
                           ("checkpoint_window", 1)):

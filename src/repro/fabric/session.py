@@ -64,13 +64,14 @@ def _build_transport(config: FabricConfig, codec=None):
     encode = decode = None
     if codec is not None:
         encode, decode = codec
-    elif config.arch is not None and config.transport == "sim":
+    elif config.arch is not None and config.transport in ("sim", "wire"):
         from repro.serving.engine import request_from_state, request_state
         encode, decode = request_state, request_from_state
     return make_transport(
         config.transport, config.hosts, drop=config.transport_drop,
         reorder=config.transport_reorder, delay=config.transport_delay,
-        seed=config.transport_seed, encode=encode, decode=decode)
+        seed=config.transport_seed, rtt_ms=config.transport_rtt_ms,
+        credit=config.transport_credit, encode=encode, decode=decode)
 
 
 class Fabric:
@@ -237,15 +238,23 @@ class Fabric:
         if self._closed:
             return
         self._closed = True
-        if self._ckpt is not None:
-            try:
-                self._ckpt.drain()
-                if final_checkpoint:
-                    from repro.checkpoint.checkpointer import save
-                    save(self.config.checkpoint_dir, self.step_count, {},
-                         aux={"fabric": self.snapshot()})
-            finally:
-                self._ckpt.close()
+        try:
+            if self._ckpt is not None:
+                try:
+                    self._ckpt.drain()
+                    if final_checkpoint:
+                        from repro.checkpoint.checkpointer import save
+                        save(self.config.checkpoint_dir, self.step_count, {},
+                             aux={"fabric": self.snapshot()})
+                finally:
+                    self._ckpt.close()
+        finally:
+            # transports that own external resources (the wire transport's
+            # host worker processes + sockets) tear down last, after any
+            # final snapshot has finished talking to them
+            tclose = getattr(self._replica_set.transport, "close", None)
+            if callable(tclose):
+                tclose()
 
     def __enter__(self) -> "Fabric":
         return self
@@ -513,6 +522,11 @@ class Fabric:
         if self._ckpt is not None:
             checkpoint = {"written": list(self._ckpt.written),
                           "dropped": self._ckpt.dropped}
+        transport = _json_safe(snap["transport"])
+        if self._obs_hub is not None:
+            rtt = self._obs_hub.snapshot().get("rtt_ms")
+            if rtt:
+                transport["rtt_ms"] = _json_safe(rtt)
         return StatsView(
             step=self.step_count,
             num_replicas=self.num_replicas,
@@ -521,7 +535,7 @@ class Fabric:
             classes=classes,
             slo=slo,
             replicas=_json_safe(snap["replicas"]),
-            transport=_json_safe(snap["transport"]),
+            transport=transport,
             checkpoint=checkpoint,
             obs=(_json_safe(self._obs_hub.snapshot())
                  if self._obs_hub is not None else None),

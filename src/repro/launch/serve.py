@@ -51,6 +51,9 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
     from repro.fabric import ClassSpec, FabricConfig, tiered_classes
     classes = tiered_classes() if args.multitenant else (ClassSpec("default"),)
     hosts = getattr(args, "hosts", 1)
+    transport = getattr(args, "transport", "auto")
+    if transport == "auto":
+        transport = "sim" if hosts > 1 else "local"
     obs = None
     if (getattr(args, "trace", None) or getattr(args, "metrics_out", None)
             or getattr(args, "stats_interval", None)):
@@ -71,7 +74,11 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
         obs=obs, control=control,
         classes=classes, replicas=args.replicas, max_replicas=max_replicas,
         policy=args.policy,
-        hosts=hosts, transport="sim" if hosts > 1 else "local",
+        hosts=hosts, transport=transport,
+        transport_drop=getattr(args, "transport_drop", 0.0),
+        transport_delay=getattr(args, "transport_delay", 0.0),
+        transport_rtt_ms=getattr(args, "transport_rtt_ms", 0.0),
+        transport_credit=getattr(args, "credit", 4),
         arch=args.arch, smoke=args.smoke, params_dir=args.ckpt_dir,
         max_batch=args.max_batch, page_size=args.page_size,
         num_pages=args.num_pages, max_seq=256, kv_window=args.window,
@@ -126,7 +133,9 @@ def verify_single_host(args, config) -> None:
     runs = {}
     for label, cfg in (("multi", config),
                        ("single", dataclasses.replace(
-                           config, hosts=1, transport="local"))):
+                           config, hosts=1, transport="local",
+                           transport_drop=0.0, transport_delay=0.0,
+                           transport_reorder=False, transport_rtt_ms=0.0))):
         fab = Fabric.open(cfg)
         uids, tenant_of, done, order = run_workload(fab, args)
         runs[label] = (uids, tenant_of, done, order)
@@ -198,6 +207,31 @@ def build_parser() -> argparse.ArgumentParser:
                         help="spread the replicas over N simulated hosts "
                              "(host-addressed seats over the sim "
                              "transport; 1 = in-process local transport)")
+    fabric.add_argument("--transport", default="auto",
+                        choices=("auto", "local", "sim", "wire"),
+                        help="seat transport: 'sim' = in-process simulated "
+                             "hosts, 'wire' = real per-host worker "
+                             "processes over localhost TCP (DESIGN.md "
+                             "§15); 'auto' picks sim when --hosts > 1 "
+                             "else local")
+    fabric.add_argument("--transport-drop", type=float, default=0.0,
+                        metavar="P",
+                        help="chaos: drop each remote data-plane message "
+                             "with probability P before it changes state "
+                             "(sim and wire transports)")
+    fabric.add_argument("--transport-delay", type=float, default=0.0,
+                        metavar="P",
+                        help="chaos: park each remote fetch batch with "
+                             "probability P until the next quiesce")
+    fabric.add_argument("--transport-rtt-ms", type=float, default=0.0,
+                        help="inject a deterministic per-op round-trip "
+                             "time in milliseconds (sim: sleeps per op; "
+                             "wire: server delays responses, so "
+                             "pipelined fetches overlap the RTT)")
+    fabric.add_argument("--credit", type=int, default=4,
+                        help="wire transport prefetch credit: fetches "
+                             "kept in flight per (class, shard); 1 = "
+                             "synchronous request/response")
     fabric.add_argument("--policy", nargs="?", const="wfq", default="strict",
                         choices=("strict", "wfq", "fifo"),
                         help="cross-class drain policy (with "
@@ -291,6 +325,10 @@ def main() -> None:
                          max_seq=config.max_seq,
                          device_admission=config.device_admission,
                          hosts=config.hosts, transport=config.transport,
+                         transport_drop=config.transport_drop,
+                         transport_delay=config.transport_delay,
+                         transport_rtt_ms=config.transport_rtt_ms,
+                         transport_credit=config.transport_credit,
                          params_dir=config.params_dir,
                          obs=config.obs, control=config.control,
                          checkpoint_every_n_steps=(

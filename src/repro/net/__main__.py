@@ -1,0 +1,7 @@
+"""``python -m repro.net`` — host worker entry point for the wire
+transport (spec line on stdin, ``PORT <n>`` on stdout; see
+:func:`repro.net.server.worker_main`)."""
+
+from repro.net.server import main
+
+main()

@@ -181,6 +181,24 @@ def prometheus_text(stats, gauges: Optional[dict] = None) -> str:
             if isinstance(val, (int, float)) and not isinstance(val, bool):
                 series.append((_prom_name(f"slo_{key}"), label, val, "gauge"))
     for key, val in stats.get("transport", {}).items():
+        if key == "rtt_ms" and isinstance(val, dict):
+            # per-dest-host RTT percentiles from the obs hub (the wire
+            # transport and rtt-injected sim both feed record_rtt)
+            for host, pct in val.items():
+                if not isinstance(pct, dict):
+                    continue
+                for q in ("p50", "p99"):
+                    v = pct.get(q)
+                    if isinstance(v, (int, float)) \
+                            and not isinstance(v, bool):
+                        series.append((
+                            _prom_name("transport_rtt_ms"),
+                            f'{{host="{host}",quantile="{q}"}}', v, "gauge"))
+                n = pct.get("count")
+                if isinstance(n, (int, float)) and not isinstance(n, bool):
+                    series.append((_prom_name("transport_rtt_count"),
+                                   f'{{host="{host}"}}', n, "counter"))
+            continue
         if isinstance(val, (int, float)) and not isinstance(val, bool):
             typ = "counter" if key in _COUNTER_KEYS else "gauge"
             series.append((_prom_name(f"transport_{key}"), "", val, typ))

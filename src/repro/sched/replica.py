@@ -546,16 +546,13 @@ class ReplicaSet:
         self.replicas = self._build_replicas(new_n)
         live = [r.addr for r in self.replicas if r.alive]
         assert live, "resize with every host dead"
-        moved = 0
-        for seats in self.seats.values():
-            for s, seat in enumerate(seats):
-                target = live[s % len(live)]
-                cur = seat.owner.load()
-                while cur != target:
-                    if seat.owner.cas(cur, target):
-                        moved += 1
-                        break
-                    cur = seat.owner.load()
+        # One reseat batch for the whole sweep: in-process transports CAS
+        # the seat cells directly; the wire transport coalesces each host's
+        # slice into one batched claim frame.
+        moved = self.transport.reseat(
+            [(name, s, live[s % len(live)])
+             for name, seats in self.seats.items()
+             for s in range(len(seats))])
         self._reinject(carried)
         self.resizes += 1
         return moved
@@ -605,24 +602,19 @@ class ReplicaSet:
                 wire_encode(envs, self.transport._encode),
                 self.transport._decode, t_submit=stamps)
         # Reassign the dead host's seats round-robin over the survivors —
-        # recovery is control-plane: direct CASes, not chaos-lossy RPCs.
-        # One cycle shared across ALL classes: restarting it per class
-        # would hand every class's dead seat to the same survivor and
-        # concentrate the dead host's whole backlog on one replica.
-        moved = 0
+        # recovery is control-plane: a reseat batch, not chaos-lossy RPCs,
+        # conditional on the owner still being the dead host (a concurrent
+        # steal that got there first wins). One cycle shared across ALL
+        # classes: restarting it per class would hand every class's dead
+        # seat to the same survivor and concentrate the dead host's whole
+        # backlog on one replica.
         tgt = itertools.cycle(survivors)
-        for seats in self.seats.values():
-            for seat in seats:
-                cur = seat.owner.load()
-                if cur.host != host:
-                    continue
-                nxt = next(tgt).addr
-                while not seat.owner.cas(cur, nxt):
-                    cur = seat.owner.load()
-                    if cur.host != host:  # a concurrent steal got there
-                        break
-                else:
-                    moved += 1
+        assignments = []
+        for name, seats in self.seats.items():
+            for s, seat in enumerate(seats):
+                if seat.owner.load().host == host:
+                    assignments.append((name, s, next(tgt).addr))
+        moved = self.transport.reseat(assignments, expect_host=host)
         self._reinject(carried)
         self.host_failures += 1
         return moved
@@ -760,11 +752,16 @@ class ReplicaSet:
             qc = sched.by_name[name]
             S = len(qc.shards)
             seats = rs.seats[name]
+            assignments = []
             for s, (owner, nxt) in enumerate(zip(cs["owners"],
                                                  cs["next_seats"])):
                 _, rid = decode_owner(owner)
-                seats[s].owner.store(rs.transport.addr_of(rid))
+                assignments.append((name, s, rs.transport.addr_of(rid)))
                 seats[s].next_seat.store(int(nxt))
+            # restore is a reseat sweep like resize: in-process transports
+            # CAS the cells; the wire transport also updates the spawned
+            # fleet's authoritative seat tables
+            rs.transport.reseat(assignments)
             for rec in cs["pending"]:
                 env = decode_envelope(rec, decode, now=now)
                 qc.shards.queues[env.seq % S].enqueue(env)

@@ -160,6 +160,35 @@ class Transport:
         or chaos dropped the request — all retried next round."""
         raise NotImplementedError
 
+    def reseat(self, assignments, *, expect_host: Optional[int] = None
+               ) -> int:
+        """Apply a batch of seat reassignments — the control-plane move
+        that resize / recovery / restore make, distinct from a steal's
+        single racing claim. ``assignments`` is an iterable of
+        ``(cls_name, shard, HostAddr)``; with ``expect_host`` set, a seat
+        is only moved while its current owner lives on that host (the
+        conditional recovery sweep — a racing steal wins). Returns the
+        number of seats actually moved.
+
+        The default is the direct CAS loop over the bound seat cells that
+        the in-process transports share; distributed transports override
+        it to coalesce each destination host's slice into one batched
+        claim frame."""
+        moved = 0
+        for cls_name, shard, target in assignments:
+            seat = self._seats[cls_name][shard]
+            cur = seat.owner.load()
+            while True:
+                if cur == target:
+                    break
+                if expect_host is not None and cur.host != expect_host:
+                    break  # a concurrent steal already moved this seat
+                if seat.owner.cas(cur, target):
+                    moved += 1
+                    break
+                cur = seat.owner.load()
+        return moved
+
     # ---- lifecycle --------------------------------------------------------
     def quiesce(self) -> int:
         """Flush any in-flight (delayed) envelopes back into their home
@@ -248,13 +277,21 @@ class SimHostTransport(Transport):
 
     def __init__(self, num_hosts: int, *, drop: float = 0.0,
                  reorder: bool = False, delay: float = 0.0, seed: int = 0,
-                 encode=None, decode=None):
+                 rtt: float = 0.0, encode=None, decode=None):
         assert num_hosts >= 1
         assert 0.0 <= drop < 1.0, f"drop={drop} must be in [0, 1)"
         assert 0.0 <= delay < 1.0, f"delay={delay} must be in [0, 1)"
+        assert rtt >= 0.0, f"rtt={rtt} must be >= 0"
         self.num_hosts = int(num_hosts)
         self.drop = float(drop)
         self.delay = float(delay)
+        # Deterministic injected round-trip time (seconds) charged to every
+        # seat-protocol op — fetch, publish, claim — modelling a driver
+        # that is network-separated from the whole host fleet (the wire
+        # transport's topology, where even a home-shard op crosses a
+        # socket). rtt=0 (the default) is exactly the pre-knob behavior;
+        # rtt>0 is the wire bench's sim-at-RTT baseline.
+        self.rtt = float(rtt)
         self.reorder = bool(reorder)
         self._encode = encode
         self._decode = decode
@@ -298,6 +335,11 @@ class SimHostTransport(Transport):
         with self._lock:
             return self._rng.random() < p
 
+    def _pay_rtt(self) -> None:
+        """Charge one injected round trip (no-op at the rtt=0 default)."""
+        if self.rtt > 0.0:
+            time.sleep(self.rtt)
+
     def _wire(self, envs: List[Envelope]) -> List[Envelope]:
         """One serialized hop: encode -> bytes -> decode. The originals'
         ``t_submit`` stamps ride along (same process, same monotonic clock)
@@ -315,6 +357,7 @@ class SimHostTransport(Transport):
     def fetch(self, cls_name, shard, k, addr):
         if addr.host in self._dead:
             return []  # a dead host's loops make no RPCs
+        self._pay_rtt()
         q = self._sched.by_name[cls_name].shards.queues[shard]
         if self.shard_home(shard) == addr.host:
             # Home-host fetch: zero-copy, lock-free (the counter is the
@@ -357,6 +400,7 @@ class SimHostTransport(Transport):
     def publish(self, cls_name, shard, envs, addr):
         if not envs:
             return 0
+        self._pay_rtt()
         envs = list(envs)
         remote = self.shard_home(shard) != addr.host
         t0 = time.perf_counter()
@@ -373,6 +417,7 @@ class SimHostTransport(Transport):
         return len(envs)
 
     def claim_seat(self, cls_name, shard, addr):
+        self._pay_rtt()
         seat = self._seats[cls_name][shard]
         remote = self.shard_home(shard) != addr.host
         t0 = time.perf_counter()
@@ -440,20 +485,28 @@ class SimHostTransport(Transport):
     def spec(self) -> dict:
         return {"kind": self.kind, "hosts": self.num_hosts,
                 "drop": self.drop, "delay": self.delay,
-                "reorder": self.reorder}
+                "reorder": self.reorder, "rtt_ms": self.rtt * 1e3}
 
 
 def make_transport(kind: str, hosts: int = 1, *, drop: float = 0.0,
                    reorder: bool = False, delay: float = 0.0, seed: int = 0,
+                   rtt_ms: float = 0.0, credit: int = 4,
                    encode=None, decode=None) -> Transport:
-    """``"local"`` | ``"sim"`` -> a transport instance (the FabricConfig /
-    serve.py entry point)."""
+    """``"local"`` | ``"sim"`` | ``"wire"`` -> a transport instance (the
+    FabricConfig / serve.py entry point)."""
     if kind == "local":
         assert hosts == 1, "local transport is single-host; use kind='sim'"
         return LocalTransport()
     if kind == "sim":
         return SimHostTransport(hosts, drop=drop, reorder=reorder,
-                                delay=delay, seed=seed, encode=encode,
-                                decode=decode)
+                                delay=delay, seed=seed, rtt=rtt_ms / 1e3,
+                                encode=encode, decode=decode)
+    if kind == "wire":
+        assert not reorder, ("wire transport cannot reorder: TCP delivers "
+                             "per-connection in order; use kind='sim'")
+        from repro.net.wire import WireTransport  # lazy: avoids a cycle
+        return WireTransport(hosts, drop=drop, delay=delay, rtt_ms=rtt_ms,
+                             credit=credit, seed=seed, encode=encode,
+                             decode=decode)
     raise ValueError(f"unknown transport kind {kind!r}; "
-                     f"choose from ['local', 'sim']")
+                     f"choose from ['local', 'sim', 'wire']")

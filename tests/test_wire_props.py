@@ -1,0 +1,107 @@
+"""Property tests for the wire codec and binary framing (CI slow lane;
+hypothesis is not part of the runtime deps, so the whole module skips
+where it is missing).
+
+Two invariants carry the transport's exactness argument:
+
+* ``wire_decode(wire_encode(envs))`` is the identity on (seq, stamp,
+  payload) for any JSON-able payload mix — the frontier checkpoint format
+  IS the wire format, so a byte flip here would corrupt checkpoints too;
+* the frame decoder reassembles any chunking of any frame sequence —
+  TCP may split or coalesce anywhere.
+"""
+
+import json
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.net.framing import (KIND_REQ, KIND_RESP, FrameDecoder,
+                               pack_frame)  # noqa: E402
+from repro.sched.classes import Envelope  # noqa: E402
+from repro.sched.transport import (decode_owner, wire_decode,
+                                   wire_encode)  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+_scalars = (st.none() | st.booleans() | st.integers(-2**40, 2**40)
+            | st.floats(allow_nan=False, allow_infinity=False, width=32)
+            | st.text(max_size=12))
+_payloads = st.recursive(
+    _scalars,
+    lambda kids: st.lists(kids, max_size=4)
+    | st.dictionaries(st.text(max_size=6), kids, max_size=4),
+    max_leaves=8)
+
+
+@st.composite
+def _envelopes(draw):
+    n = draw(st.integers(0, 12))
+    seqs = draw(st.lists(st.integers(0, 2**31), min_size=n, max_size=n,
+                         unique=True))
+    return [Envelope(seq, draw(st.integers(0, 2**31)),
+                     float(i) * 0.5, draw(_payloads))
+            for i, seq in enumerate(seqs)]
+
+
+@given(_envelopes())
+@settings(max_examples=200, deadline=None)
+def test_wire_codec_roundtrip_is_exact(envs):
+    stamps = [e.t_submit for e in sorted(envs)]
+    back = wire_decode(wire_encode(envs), t_submit=stamps)
+    assert [(e.seq, e.stamp, e.payload) for e in back] == \
+        [(e.seq, e.stamp, e.payload) for e in sorted(envs)]
+    assert [e.t_submit for e in back] == stamps
+    # and the blob really is the checkpoint record list
+    assert json.loads(wire_encode(envs)) == \
+        [[e.seq, e.stamp, e.payload] for e in sorted(envs)]
+
+
+@given(st.one_of(
+    st.integers(0, 2**31),                       # legacy bare replica index
+    st.tuples(st.integers(0, 64), st.integers(0, 2**31))))
+@settings(max_examples=100, deadline=None)
+def test_decode_owner_accepts_legacy_and_pair_forms(rec):
+    host, rid = decode_owner(list(rec) if isinstance(rec, tuple) else rec)
+    if isinstance(rec, tuple):
+        assert (host, rid) == rec
+    else:
+        assert (host, rid) == (0, rec)
+
+
+@given(st.lists(st.tuples(st.sampled_from([KIND_REQ, KIND_RESP]), _payloads
+                          .filter(lambda p: isinstance(p, dict))),
+                max_size=8),
+       st.data())
+@settings(max_examples=150, deadline=None)
+def test_frame_decoder_reassembles_any_chunking(frames, data):
+    stream = b"".join(pack_frame(k, b) for k, b in frames)
+    dec = FrameDecoder()
+    got = []
+    i = 0
+    while i < len(stream):
+        j = data.draw(st.integers(i + 1, len(stream)), label="chunk_end")
+        got.extend(dec.feed(stream[i:j]))
+        i = j
+    assert got == frames
+    assert dec.pending == 0
+
+
+@given(st.lists(st.tuples(st.sampled_from([KIND_REQ, KIND_RESP]),
+                          st.dictionaries(st.text(max_size=4), _scalars,
+                                          max_size=3)),
+                min_size=1, max_size=4),
+       st.integers(1, 200))
+@settings(max_examples=100, deadline=None)
+def test_truncated_stream_never_yields_a_phantom_frame(frames, cut):
+    """A prefix of a valid stream yields only the complete frames it
+    contains — truncation starves the decoder, it never fabricates."""
+    stream = b"".join(pack_frame(k, b) for k, b in frames)
+    cut = min(cut, len(stream))
+    dec = FrameDecoder()
+    got = list(dec.feed(stream[:cut]))
+    assert got == frames[:len(got)]  # a prefix, byte-exact
+    whole = sum(len(pack_frame(k, b)) for k, b in frames[:len(got)])
+    assert whole <= cut  # only frames fully inside the prefix surfaced
