@@ -89,6 +89,22 @@ GATES = [
     # replica.wire.
     ("replica.wire.vs_sim_ratio", "lower", 3.0),
     ("replica.wire.credit_speedup", "lower", 2.0),
+    # Ten-thousand-tenant fabric (ISSUE 10, DESIGN.md §16).
+    # idle_overhead_ratio is a same-machine ratio (tenant fabric vs plain
+    # 100-class fabric, interleaved best-of-3 inside the bench), so runner
+    # speed cancels; it still wobbles with scheduler noise, so 2x
+    # tolerance — a real O(declared) leak lands at several-x, far past the
+    # gate (and the bench section hard-asserts the 1.3 acceptance bound).
+    # churn.items_per_sec is wall-clock throughput: 2x tolerance like the
+    # other throughput gates. churn.interactive_p99_ms is wall-clock
+    # queueing latency of an under-capacity run (~6ms at baseline against
+    # a 50ms SLO): 10x tolerance fails past ~3.5x baseline, catching the
+    # real failure mode — the hierarchical drain going O(declared) or
+    # losing work conservation — without flaking on container jitter.
+    # Skips loudly until the committed BENCH_queue.json carries tenants.*.
+    ("tenants.idle_overhead_ratio", "higher", 2.0),
+    ("tenants.churn.items_per_sec", "lower", 2.0),
+    ("tenants.churn.interactive_p99_ms", "higher", 10.0),
 ]
 
 

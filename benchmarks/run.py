@@ -484,6 +484,57 @@ def bench_control(full: bool, out_path: str = "BENCH_queue.json") -> None:
         f"actuation (flapping)")
 
 
+def bench_tenants(full: bool, out_path: str = "BENCH_queue.json") -> None:
+    """Tenant fabric at scale (DESIGN.md §16): the O(active)-cost claim
+    (10k declared tenants, ~100 active, vs a plain 100-class fabric), the
+    heavy-tail churn workload against the tier SLOs, and the 429-style
+    shed curve. Merges into BENCH_queue.json under "tenants";
+    check_regression gates idle_overhead_ratio, churn.items_per_sec and
+    churn.interactive_p99_ms."""
+    from benchmarks.tenant_bench import churn_run, idle_overhead, shed_curve
+
+    io = idle_overhead(items=8000 if full else 4000)
+    _emit("tenants/idle_overhead", 1e6 / io["tenant_items_per_sec"],
+          f"ratio={io['ratio']:.3f},"
+          f"declared={io['declared']},grid={io['grid_classes']},"
+          f"active_classes={io['active_classes_peak']},"
+          f"baseline={io['baseline_items_per_sec']:.0f}/s")
+    cr = churn_run(waves=80 if full else 40)
+    _emit("tenants/churn", 1e6 / cr["items_per_sec"],
+          f"items_per_sec={cr['items_per_sec']:.0f},"
+          f"interactive_p99_ms={cr['interactive_p99_ms']:.2f},"
+          f"shed_frac={cr['shed_frac']:.3f},"
+          f"shed_only_lowest={cr['shed_only_lowest']}")
+    curve = shed_curve()
+    for lvl, row in curve.items():
+        _emit(f"tenants/shed_curve/{lvl}x", 0.0,
+              f"offered={row['offered']},shed_frac={row['shed_frac']:.4f},"
+              f"only_lowest={row['shed_only_lowest']}")
+
+    # Persist first (a flaky sanity check must not discard the run's data).
+    _merge_bench_json(out_path, {"tenants": {
+        "idle_overhead_ratio": io["ratio"],
+        "idle_overhead": io, "churn": cr, "shed_curve": curve}})
+    print(f"# merged tenants results into {out_path}", file=sys.stderr)
+
+    # ISSUE acceptance: declared-idle tenants cost <= 1.3x the plain-class
+    # baseline; under-capacity churn meets the interactive SLO; the shed
+    # fraction is monotone in offered load and only ever hits the lowest
+    # tier (a shed in interactive/batch is an admission-control bug).
+    assert io["ratio"] <= 1.3, (
+        f"idle-tenant overhead ratio {io['ratio']:.3f} > 1.3: the declared "
+        f"grid is leaking into the hot path")
+    assert cr["interactive_p99_ms"] <= cr["interactive_slo_ms"], (
+        f"churn interactive p99 {cr['interactive_p99_ms']:.1f}ms missed "
+        f"the {cr['interactive_slo_ms']:.0f}ms SLO")
+    fracs = [curve[k]["shed_frac"] for k in sorted(curve, key=float)]
+    assert all(a <= b for a, b in zip(fracs, fracs[1:])), (
+        f"shed curve not monotone in offered load: {fracs}")
+    assert fracs[-1] > 0, "top of the shed curve never shed (no pressure)"
+    assert all(row["shed_only_lowest"] for row in curve.values()), (
+        "a shed landed outside the lowest tier")
+
+
 def bench_quick(out_path: str = "BENCH_queue.json") -> None:
     """--quick: scalar-vs-batched throughput + atomics-per-op for all four
     queue kinds, plus the live-resize reseat latency (replica.elasticity —
@@ -601,6 +652,23 @@ def bench_quick(out_path: str = "BENCH_queue.json") -> None:
           f"closed_p99_ms={ctl['p99_ms']:.2f},"
           f"static_p99_ms={ctl['static_p99_ms']:.2f},"
           f"target_ms={ctl['target_ms']},resizes={ctl['resize_count']}")
+    # tenant fabric at scale (DESIGN.md §16): idle-overhead ratio + churn,
+    # at the SAME sizes as `--only tenants` — quick and the section
+    # merge-write the same tenants.* keys that check_regression gates
+    # (idle_overhead is already interleaved best-of-3 internally; the
+    # shed curve stays section-only, its keys are not gated)
+    from benchmarks.tenant_bench import churn_run, idle_overhead
+    io = idle_overhead(items=4000)
+    cr = churn_run(waves=40)
+    result["tenants"] = {"idle_overhead_ratio": io["ratio"],
+                         "idle_overhead": io, "churn": cr}
+    _emit("quick/tenants/idle_overhead", 1e6 / io["tenant_items_per_sec"],
+          f"ratio={io['ratio']:.3f},"
+          f"active_classes={io['active_classes_peak']}")
+    _emit("quick/tenants/churn", 1e6 / cr["items_per_sec"],
+          f"items_per_sec={cr['items_per_sec']:.0f},"
+          f"interactive_p99_ms={cr['interactive_p99_ms']:.2f},"
+          f"shed_frac={cr['shed_frac']:.3f}")
     # deep-merge-write so other sections' keys (e.g. "sched", the rest of
     # "replica") survive a --quick
     _merge_bench_json(out_path, result)
@@ -620,6 +688,7 @@ SECTIONS = {
     "replica": bench_replica,
     "obs": bench_obs,
     "control": bench_control,
+    "tenants": bench_tenants,
 }
 
 
@@ -647,7 +716,7 @@ def main() -> None:
         if only and name not in only:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
-        if name in ("sched", "replica", "obs", "control"):
+        if name in ("sched", "replica", "obs", "control", "tenants"):
             fn(args.full, out_path=args.out)
         else:
             fn(args.full)

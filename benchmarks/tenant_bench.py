@@ -1,0 +1,205 @@
+"""Tenant-fabric benchmarks (DESIGN.md §16): the O(active)-cost claim and
+the churn/shedding behavior of the hashed tenant grid.
+
+Two scenarios, both scheduler-only fabrics (no model, no jax on the hot
+path), sized for the 1-core container:
+
+  * ``idle_overhead`` — a fabric with 10k *declared* tenants but only ~100
+    active ones drains a wave at the same order of cost as a plain
+    100-class baseline fabric: the active-set index makes every step
+    O(active classes), never O(declared grid). The gated number is the
+    throughput ratio baseline/tenant (1.0 = free; the acceptance bound is
+    1.3).
+  * ``churn`` — heavy-tailed tenant popularity over the declared
+    population under sustained waves: per-tier admission latency against
+    the grid SLOs, overall drain throughput, and the 429-style shed curve
+    (shed fraction must rise monotonically with offered load, and only
+    the lowest tier may shed).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+from repro.fabric import ClassSpec, Fabric, FabricConfig, TenantSpec
+
+TIERS = ("interactive", "batch", "background")
+
+
+def _pctl(xs: List[float], p: float) -> float:
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(p / 100.0 * (len(s) - 1))))]
+
+
+def heavy_tail_tenant(i: int, num_tenants: int) -> int:
+    """Deterministic log-uniform tenant draw (same mapping as serve.py's
+    ``tenant_of_request``): a handful of tenants dominate, the tail
+    trickles — no RNG state, identical across runs."""
+    h = (i * 2654435761) & 0xFFFFFFFF
+    return int(num_tenants ** (h / 2 ** 32)) - 1 if num_tenants > 1 else 0
+
+
+def _drain_all(fab: Fabric, expect: int, max_steps: int = 100000) -> int:
+    got = 0
+    for _ in range(max_steps):
+        batch = fab.step()
+        got += len(batch)
+        if got >= expect:
+            break
+    return got
+
+
+def _tenant_wave(declared: int, groups: int, active: int, items: int,
+                 drain_k: int) -> Dict:
+    tcfg = FabricConfig(
+        tenants=TenantSpec(num_tenants=declared, num_groups=groups,
+                           group_window=None),
+        queue_window=4096, drain_k=drain_k)
+    fab = Fabric.open(tcfg)
+    t0 = time.perf_counter()
+    admitted = 0
+    for i in range(items):
+        tid = i % active  # every one of the `active` tenants stays hot
+        env = fab.submit(("w", i), tenant=f"t{tid}", tier=TIERS[tid % 3])
+        admitted += env is not None
+    delivered = _drain_all(fab, admitted)
+    wall = time.perf_counter() - t0
+    view = fab.stats_view()
+    active_classes = (view.tenants or {}).get("active_classes", 0)
+    fab.close()
+    assert delivered == admitted == items, (
+        f"tenant fabric lost items: {delivered}/{admitted}/{items}")
+    return {"ips": items / max(wall, 1e-9), "active_classes": active_classes}
+
+
+def _baseline_wave(items: int, drain_k: int) -> float:
+    base_classes = tuple(ClassSpec(f"c{i:03d}", weight=1.0)
+                         for i in range(100))
+    bcfg = FabricConfig(classes=base_classes, policy="wfq",
+                        queue_window=4096, drain_k=drain_k)
+    bfab = Fabric.open(bcfg)
+    t0 = time.perf_counter()
+    for i in range(items):
+        bfab.submit(("w", i), qclass=f"c{i % 100:03d}")
+    bdone = _drain_all(bfab, items)
+    wall = time.perf_counter() - t0
+    bfab.close()
+    assert bdone == items, f"baseline fabric lost items: {bdone}/{items}"
+    return items / max(wall, 1e-9)
+
+
+def idle_overhead(*, declared: int = 10000, groups: int = 256,
+                  active: int = 96, items: int = 4000,
+                  drain_k: int = 64, rounds: int = 3) -> Dict:
+    """Throughput of a 10k-declared-tenant fabric with ~100 active tenants
+    vs a plain 100-class baseline on the same wave. The declared grid is
+    3*groups real classes; the active-set means the drain only ever visits
+    the ~``active`` groups that hold work. Interleaved best-of-``rounds``
+    pairs — both sides are wall-clock on a 1-core container, and a real
+    O(declared) regression shows up in every round while noise rarely
+    repeats."""
+    tenant_ips = base_ips = 0.0
+    active_classes = 0
+    for _ in range(rounds):
+        t = _tenant_wave(declared, groups, active, items, drain_k)
+        tenant_ips = max(tenant_ips, t["ips"])
+        active_classes = max(active_classes, t["active_classes"])
+        base_ips = max(base_ips, _baseline_wave(items, drain_k))
+    return {
+        "declared": declared, "groups": groups, "active_tenants": active,
+        "grid_classes": 3 * groups, "items": items,
+        "tenant_items_per_sec": tenant_ips,
+        "baseline_items_per_sec": base_ips,
+        "active_classes_peak": active_classes,
+        # >1 means the declared-idle grid costs more than the 100-class
+        # baseline; the acceptance bound is 1.3
+        "ratio": base_ips / max(tenant_ips, 1e-9),
+    }
+
+
+def churn_run(*, declared: int = 2000, groups: int = 32, waves: int = 40,
+              per_wave: int = 60, group_window: int = 64,
+              page_quota: int = 512, drain_k: int = 64,
+              service_s: float = 0.0) -> Dict:
+    """One sustained heavy-tail wave workload against a tenant fabric:
+    every wave submits ``per_wave`` heavy-tail-routed items (tiers
+    cycling), then the fabric drains one batch; leftover backlog drains
+    after the arrival phase. Reports throughput, per-tier admission
+    latency, and the shed/reject split."""
+    cfg = FabricConfig(
+        tenants=TenantSpec(num_tenants=declared, num_groups=groups,
+                           group_window=group_window,
+                           page_quota=page_quota),
+        queue_window=8192, drain_k=drain_k)
+    fab = Fabric.open(cfg)
+    lat: Dict[str, List[float]] = {t: [] for t in TIERS}
+    offered = admitted = delivered = 0
+
+    def drain_once() -> int:
+        batch = fab.step()
+        now = time.monotonic()
+        for view, env in batch:
+            tier = view.name.split(":", 1)[1]
+            lat[tier].append((now - env.t_submit) * 1e3)
+        if batch and service_s:
+            time.sleep(service_s)
+        return len(batch)
+
+    t0 = time.perf_counter()
+    i = 0
+    for _ in range(waves):
+        for _ in range(per_wave):
+            tid = heavy_tail_tenant(i, declared)
+            env = fab.submit(("c", i), tenant=f"t{tid}", tier=TIERS[i % 3])
+            offered += 1
+            admitted += env is not None
+            i += 1
+        delivered += drain_once()
+    while True:
+        got = drain_once()
+        delivered += got
+        if not got:
+            break
+    wall = time.perf_counter() - t0
+
+    view = fab.stats_view()
+    tenants = view.tenants or {}
+    shed = tenants.get("shed_total", 0)
+    shed_classes = [n for n, c in view.classes.items() if c.shed > 0]
+    fab.close()
+    assert delivered == admitted, (
+        f"churn lost items: delivered {delivered} != admitted {admitted}")
+    out = {
+        "declared": declared, "groups": groups,
+        "offered": offered, "admitted": admitted, "delivered": delivered,
+        "items_per_sec": delivered / max(wall, 1e-9),
+        "shed": shed,
+        "shed_frac": shed / max(offered, 1),
+        "rejected": tenants.get("totals", {}).get("rejected", 0),
+        "shed_only_lowest": all(n.endswith(":" + TIERS[-1])
+                                for n in shed_classes),
+        "interactive_slo_ms": 50.0,
+    }
+    for tier in TIERS:
+        xs = lat[tier]
+        out[f"{tier}_p50_ms"] = _pctl(xs, 50) if xs else None
+        out[f"{tier}_p99_ms"] = _pctl(xs, 99) if xs else None
+    return out
+
+
+def shed_curve(levels: Sequence[float] = (0.5, 1.0, 2.0), **kw) -> Dict:
+    """The churn workload replayed at scaled offered load: the shed
+    fraction must be monotone non-decreasing in load (more pressure, more
+    429s — never fewer), and every shed must land in the lowest tier."""
+    base = dict(declared=2000, groups=32, waves=40, per_wave=60,
+                group_window=64)
+    base.update(kw)
+    per_wave = base.pop("per_wave")
+    curve = {}
+    for lvl in levels:
+        r = churn_run(per_wave=max(1, int(per_wave * lvl)), **base)
+        curve[str(lvl)] = {"offered": r["offered"],
+                           "shed_frac": r["shed_frac"],
+                           "shed_only_lowest": r["shed_only_lowest"]}
+    return curve

@@ -15,6 +15,7 @@ replicas, and serving (DESIGN.md §10).
 """
 
 from repro.fabric.config import (ClassSpec, FabricConfig, FabricConfigError,
+                                 TenantSpec, tenant_grid_classes,
                                  tiered_classes)
 from repro.fabric.session import Fabric
 from repro.fabric.stats import (SCHEMA_VERSION, ClassStatsView, SloView,
@@ -22,7 +23,7 @@ from repro.fabric.stats import (SCHEMA_VERSION, ClassStatsView, SloView,
 
 __all__ = ["ClassSpec", "ClassStatsView", "Fabric", "FabricConfig",
            "FabricConfigError", "SCHEMA_VERSION", "SloView", "StatsView",
-           "tiered_classes"]
+           "TenantSpec", "tenant_grid_classes", "tiered_classes"]
 
 _REMOVED = {
     "compat": "the repro.fabric.compat shim module",

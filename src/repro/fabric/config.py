@@ -26,8 +26,9 @@ from typing import Optional, Tuple
 
 from repro.control.config import ControlConfig
 from repro.obs.recorder import ObsConfig
+from repro.sched.tenants import TIERS, group_class_name
 
-_POLICIES = ("strict", "wfq", "fifo")
+_POLICIES = ("strict", "wfq", "fifo", "hier")
 
 
 class FabricConfigError(ValueError):
@@ -49,6 +50,70 @@ class ClassSpec:
     weight: float = 1.0
     admit_window: Optional[int] = None
     slo_ms: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """Tenant-scale knobs (DESIGN.md §16): declare O(10k) tenants, pay for
+    the active ones.
+
+    Setting ``tenants=TenantSpec(...)`` on a :class:`FabricConfig` derives
+    the class grid — ``num_groups`` groups x 3 tiers (interactive / batch /
+    background, the serve.py tier semantics) — and tenants hash onto the
+    groups deterministically (FNV-1a with ``salt``; stable across
+    resize / fail_host / snapshot-restore). The hot path then costs
+    O(active classes): the scheduler's active-set index skips idle groups
+    entirely.
+
+    num_tenants: declared tenant population (capacity-planning input and
+      the bench's churn universe; the grid size does NOT depend on it).
+    num_groups: class-groups tenants hash onto. The real class count is
+      ``3 * num_groups`` — bounded no matter how many tenants exist.
+    salt: routing-hash salt (re-shuffles tenant->group placement).
+    group_window: per-(group, tier) admission window — the window-pressure
+      input to overload shedding; None = unbounded (disables pressure
+      shedding, quota shedding still applies).
+    page_quota: per-tenant KV page quota; None = no quota ledger.
+    quota_total: fabric-wide aggregate page cap, carved per transport host
+      with the host-first split. Defaults to ``num_pages`` on serving
+      fabrics and ``num_groups * page_quota`` on scheduler-only ones.
+    admit_pressure: group occupancy fraction (of the summed tier windows)
+      beyond which lowest-tier submissions shed with a 429-style reject.
+    quota_hosts: ledger host-cap split override; None = ``config.hosts``.
+      Pin it when comparing layouts (``--verify-single-host``) so quota
+      admission decisions stay identical at hosts=N and hosts=1.
+    stats_capacity / stats_top_k: lazy per-tenant stats table bound and
+      the top-K-by-backlog emitted in stats()/Prometheus.
+    """
+
+    num_tenants: int
+    num_groups: int = 32
+    salt: int = 0
+    group_window: Optional[int] = 512
+    page_quota: Optional[int] = None
+    quota_total: Optional[int] = None
+    admit_pressure: float = 0.85
+    quota_hosts: Optional[int] = None
+    stats_capacity: int = 1024
+    stats_top_k: int = 8
+
+
+def tenant_grid_classes(spec: TenantSpec) -> Tuple[ClassSpec, ...]:
+    """The derived class grid for a tenant fabric: ``num_groups`` groups x
+    the 3 standard tiers, group-major, named ``g{gid:03d}:{tier}`` (the
+    group rides the class *name*, so every name-keyed path — snapshots,
+    wire codec, seats, stats — works unchanged). Same priority/weight/SLO
+    shape per tier as :func:`tiered_classes`."""
+    tiers = (
+        (TIERS[0], 2, 8.0, 50.0),
+        (TIERS[1], 1, 3.0, 500.0),
+        (TIERS[2], 0, 1.0, None),
+    )
+    return tuple(
+        ClassSpec(group_class_name(g, tier), priority=pr, weight=w,
+                  admit_window=spec.group_window, slo_ms=slo)
+        for g in range(spec.num_groups)
+        for tier, pr, w, slo in tiers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +214,11 @@ class FabricConfig:
     # actions); a ControlConfig arms the SLO-driven autoscaler inside
     # Fabric.step (DESIGN.md §14). Requires obs (its sensor input).
     control: Optional[ControlConfig] = None
+    # tenant scale (DESIGN.md §16): None = classes are what you declared;
+    # a TenantSpec derives the bounded group x tier class grid, arms
+    # hashed tenant routing + O(active) tracking + admission shedding in
+    # Fabric, and auto-selects the hierarchical drain policy.
+    tenants: Optional[TenantSpec] = None
 
     def __post_init__(self):
         # normalize: accept any iterable of ClassSpec (or spec dicts), then
@@ -161,6 +231,20 @@ class FabricConfig:
             object.__setattr__(self, "obs", ObsConfig(**self.obs))
         if isinstance(self.control, dict):  # JSON round-trip form
             object.__setattr__(self, "control", ControlConfig(**self.control))
+        if isinstance(self.tenants, dict):  # JSON round-trip form
+            object.__setattr__(self, "tenants", TenantSpec(**self.tenants))
+        if self.tenants is not None:
+            # Derive the grid. A default classes field is replaced; a
+            # snapshot round trip (to_json emits the derived grid) passes
+            # the grid back in, which must match; anything else is a
+            # contradiction caught by validate().
+            if self.classes == (ClassSpec("default"),):
+                object.__setattr__(self, "classes",
+                                   tenant_grid_classes(self.tenants))
+            if self.policy == "strict":
+                # strict across 3*G grid classes would starve whole groups;
+                # the tenant fabric's native policy is hierarchical WFQ
+                object.__setattr__(self, "policy", "hier")
         if self.max_replicas is None:
             object.__setattr__(self, "max_replicas", self.replicas)
         if self.shards_per_class is None:
@@ -193,6 +277,44 @@ class FabricConfig:
         if self.policy not in _POLICIES:
             bad(f"unknown policy {self.policy!r}; choose from "
                 f"{list(_POLICIES)}")
+        if self.tenants is not None:
+            t = self.tenants
+            if t.num_tenants < 1:
+                bad(f"tenants.num_tenants must be >= 1 "
+                    f"(got {t.num_tenants})")
+            if not (1 <= t.num_groups <= 4096):
+                bad(f"tenants.num_groups must be in [1, 4096] "
+                    f"(got {t.num_groups}); the class grid is "
+                    f"3*num_groups real queues")
+            if t.group_window is not None and t.group_window < 1:
+                bad(f"tenants.group_window must be >= 1 or None "
+                    f"(got {t.group_window})")
+            if t.page_quota is not None and t.page_quota < 1:
+                bad(f"tenants.page_quota must be >= 1 or None "
+                    f"(got {t.page_quota})")
+            if t.quota_total is not None and t.page_quota is None:
+                bad("tenants.quota_total without page_quota: the aggregate "
+                    "cap only exists inside the quota ledger — set "
+                    "page_quota or drop quota_total")
+            if not (0.0 < t.admit_pressure <= 1.0):
+                bad(f"tenants.admit_pressure must be in (0, 1] "
+                    f"(got {t.admit_pressure})")
+            if t.quota_hosts is not None and t.quota_hosts < 1:
+                bad(f"tenants.quota_hosts must be >= 1 or None "
+                    f"(got {t.quota_hosts})")
+            if t.stats_capacity < 1 or t.stats_top_k < 0:
+                bad(f"tenants stats bounds invalid (stats_capacity="
+                    f"{t.stats_capacity}, stats_top_k={t.stats_top_k})")
+            derived = tenant_grid_classes(t)
+            if self.classes != derived:
+                bad("tenants=TenantSpec(...) derives the class grid "
+                    "(num_groups x 3 tiers) itself — drop the explicit "
+                    "classes field (or keep the default) so the grid and "
+                    "the tenant routing cannot disagree")
+            if self.policy == "strict":
+                bad("tenants with policy='strict': strict priority across "
+                    "the whole grid starves entire groups — use 'hier' "
+                    "(the default with tenants), 'wfq' or 'fifo'")
         if len(self.classes) == 1 and self.policy != "strict":
             bad(f"cross-class policy {self.policy!r} has no effect with the "
                 f"single class {names[0]!r}: declare multiple classes "

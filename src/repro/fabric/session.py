@@ -35,6 +35,9 @@ from repro.fabric.config import FabricConfig, FabricConfigError
 from repro.fabric.stats import (SloView, StatsView, _json_safe,
                                 class_view_from_snapshot)
 from repro.sched import QueueClass, ReplicaSet, Scheduler, make_transport
+from repro.sched.tenants import (TIERS, TenantMap, TenantQuotaLedger,
+                                 TenantRouter, TenantStatsTable,
+                                 group_class_name)
 
 # Fabric.stats() (the raw-dict alias of stats_view()) warns once per
 # process, not once per call site — the alias is a migration aid, not a
@@ -80,7 +83,8 @@ class Fabric:
     (``close()`` on exit writes the final frontier checkpoint)."""
 
     def __init__(self, config: FabricConfig, *, replica_set=None, group=None,
-                 model_cfg=None, params=None, step: int = 0):
+                 model_cfg=None, params=None, step: int = 0,
+                 tenant_state: Optional[dict] = None):
         assert (replica_set is None) != (group is None), \
             "exactly one of replica_set (sched-only) / group (serving)"
         self.config = config
@@ -91,6 +95,17 @@ class Fabric:
         self.params = params
         self.step_count = int(step)
         self._closed = False
+        self._spec_by_name = {s.name: s for s in config.classes}
+        # tenant scale (DESIGN.md §16): with config.tenants set, the
+        # scheduler's hot paths switch to O(active classes) and submits
+        # route through the tenant router (hashing, quotas, shedding).
+        # Attached post-construction like the obs hub, so every
+        # construction path (open / from_snapshot / replica rebuild)
+        # works unchanged.
+        self._tenants: Optional[TenantRouter] = None
+        if config.tenants is not None:
+            self._replica_set.scheduler.enable_active_tracking()
+            self._tenants = self._build_router(config, tenant_state)
         self._ckpt = None
         if config.checkpoint_dir is not None:
             from repro.checkpoint.checkpointer import AsyncCheckpointer
@@ -160,7 +175,8 @@ class Fabric:
         from the snapshot (they ARE the resume state)."""
         config = FabricConfig.from_json(snapshot["config"])
         if overrides:
-            for key in ("classes", "shards_per_class", "replicas"):
+            for key in ("classes", "shards_per_class", "replicas",
+                        "tenants"):
                 if key in overrides:
                     raise FabricConfigError(
                         f"from_snapshot: cannot override {key!r} — it is "
@@ -171,13 +187,15 @@ class Fabric:
                 and checkpoint_dir != config.checkpoint_dir:
             config = dataclasses.replace(config, checkpoint_dir=checkpoint_dir)
         step = int(snapshot.get("step", 0))
+        tenant_state = snapshot.get("tenants")
         transport = _build_transport(config, codec)
         if config.arch is None:
             rs = ReplicaSet.from_state(snapshot["sched"],
                                        policy=config.policy,
                                        min_steal=config.min_steal,
                                        transport=transport)
-            return cls(config, replica_set=rs, step=step)
+            return cls(config, replica_set=rs, step=step,
+                       tenant_state=tenant_state)
         model_cfg, params = cls._model_state(config, model_cfg, params)
         from repro.serving.engine import EngineReplicaGroup
         group = EngineReplicaGroup.from_sched_state(
@@ -188,7 +206,7 @@ class Fabric:
             transport=transport,
             device_admission=config.device_admission)
         return cls(config, group=group, model_cfg=model_cfg, params=params,
-                   step=step)
+                   step=step, tenant_state=tenant_state)
 
     @classmethod
     def restore(cls, checkpoint_dir: str, *, step: Optional[int] = None,
@@ -209,6 +227,27 @@ class Fabric:
                                  model_cfg=model_cfg,
                                  checkpoint_dir=checkpoint_dir,
                                  overrides=overrides, codec=codec)
+
+    @staticmethod
+    def _build_router(config: FabricConfig,
+                      state: Optional[dict]) -> TenantRouter:
+        t = config.tenants
+        if state is not None:  # snapshot restore: routing/quotas/stats ride
+            return TenantRouter.from_state(state, t.stats_capacity,
+                                           t.stats_top_k)
+        tmap = TenantMap(t.num_tenants, t.num_groups, t.salt)
+        stats = TenantStatsTable(t.stats_capacity, t.stats_top_k)
+        ledger = None
+        if t.page_quota is not None:
+            total = t.quota_total
+            if total is None:
+                # serving fabrics cap at the real page budget; scheduler-
+                # only ones (no KV pool) at one full quota per group
+                total = (config.num_pages if config.arch is not None
+                         else t.num_groups * t.page_quota)
+            ledger = TenantQuotaLedger(t.page_quota, total,
+                                       t.quota_hosts or config.hosts)
+        return TenantRouter(tmap, stats, ledger, t.admit_pressure)
 
     @staticmethod
     def _model_state(config: FabricConfig, model_cfg, params):
@@ -302,16 +341,98 @@ class Fabric:
 
     # ---------------------------------------------------------------- client
     def submit(self, item, *, qclass: Optional[str] = None,
+               tenant=None, tier: Optional[str] = None,
                max_new_tokens: int = 16):
         """Serving mode: ``item`` is a token prompt; returns its uid (None
         on admission-window rejection). Scheduler-only mode: ``item`` is an
-        arbitrary payload; returns its Envelope (None on rejection)."""
+        arbitrary payload; returns its Envelope (None on rejection).
+
+        Tenant fabrics (``config.tenants``): pass ``tenant`` (any hashable
+        id) and optionally ``tier`` (interactive | batch | background,
+        default interactive) instead of ``qclass`` — routing, per-tenant
+        quota accounting and overload shedding happen here. ``None`` also
+        means a 429-style shed (lowest tier under group pressure or quota
+        exhaustion — counted in ``StatsView.classes[...].shed``)."""
         self._check_open()
+        if tenant is not None:
+            if self._tenants is None:
+                raise FabricConfigError(
+                    "submit(tenant=...) needs a tenant fabric: set "
+                    "tenants=TenantSpec(...) on the config")
+            return self._submit_tenant(item, tenant, tier or TIERS[0],
+                                       max_new_tokens)
         if self._group is not None:
             return self._group.submit(item, max_new_tokens=max_new_tokens,
                                       qclass=qclass)
         name = qclass or self._replica_set.scheduler.default_class
         return self._replica_set.submit(name, item)
+
+    def _page_estimate(self, item, max_new_tokens: int) -> int:
+        """Admission-time KV page estimate for the quota ledger: the pages
+        the request will occupy at full length (serving), or 1 unit per
+        item on scheduler-only fabrics (the ledger then meters items)."""
+        if self._group is None:
+            return 1
+        tokens = len(item) + max_new_tokens
+        return -(-tokens // self.config.page_size)
+
+    def _group_pressure(self, gid: int) -> bool:
+        """Group overload signal for admission shedding: summed window
+        occupancy across the group's tier classes vs the summed windows
+        (plain atomic loads of state that already exists — zero added
+        atomics, O(tiers) per submit)."""
+        router = self._tenants
+        by_name = self._replica_set.scheduler.by_name
+        occ = cap = 0
+        for tier in router.map.tiers:
+            qc = by_name[group_class_name(gid, tier)]
+            if qc.admit_window:
+                occ += qc._inflight.load()
+                cap += qc.admit_window
+        return cap > 0 and occ >= router.admit_pressure * cap
+
+    def _submit_tenant(self, item, tenant, tier: str, max_new_tokens: int):
+        """The tenant admission path: route -> shed check (lowest tier
+        only) -> quota charge -> class submit; every deny leaves the
+        ledger exactly where it was. Admission keys — (class, seq) for
+        scheduler-only, uid for serving — are credited back in step()."""
+        router = self._tenants
+        gid, cls = router.route(tenant, tier)
+        pages = self._page_estimate(item, max_new_tokens)
+        sheddable = router.sheddable(tier)
+        if sheddable and self._group_pressure(gid):
+            router.note_shed(tenant, cls)
+            self._replica_set.scheduler.by_name[cls].stats.add_rejected()
+            return None
+        if not router.try_charge(tenant, pages):
+            if sheddable:
+                router.note_shed(tenant, cls)
+            else:
+                router.note_reject(tenant)
+            self._replica_set.scheduler.by_name[cls].stats.add_rejected()
+            return None
+        if self._group is not None:
+            uid = self._group.submit(item, max_new_tokens=max_new_tokens,
+                                     qclass=cls)
+            if uid is None:  # window rejection inside the class
+                router.cancel_charge(tenant, pages)
+                if sheddable:
+                    router.note_shed(tenant, cls)
+                else:
+                    router.note_reject(tenant)
+                return None
+            router.note_admit(tenant, uid, pages)
+            return uid
+        env = self._replica_set.submit(cls, item)
+        if env is None:
+            router.cancel_charge(tenant, pages)
+            if sheddable:
+                router.note_shed(tenant, cls)
+            else:
+                router.note_reject(tenant)
+            return None
+        router.note_admit(tenant, (cls, env.seq), pages)
+        return env
 
     def submit_many(self, items: Sequence, *, qclass: Optional[str] = None,
                     max_new_tokens: int = 16) -> List:
@@ -339,6 +460,16 @@ class Fabric:
             for r in self._replica_set.replicas:
                 out.extend(r.drain(self.config.drain_k))
             self._replica_set.rebalance()
+        router = self._tenants
+        if router is not None and out:
+            # credit quota charges + per-tenant delivery counts by the
+            # admission key: uid (serving completions) or (class, seq)
+            if self._group is not None:
+                for req in out:
+                    router.on_done(req.uid)
+            else:
+                for view, env in out:
+                    router.on_done((view.name, env.seq))
         every = self.config.checkpoint_every_n_steps
         if (self._ckpt is not None and every is not None
                 and self.step_count % every == 0):
@@ -459,6 +590,12 @@ class Fabric:
         ``prometheus_text(fabric.stats_view())``."""
         return self._obs_hub
 
+    @property
+    def tenants(self) -> Optional[TenantRouter]:
+        """The tenant router (None unless ``config.tenants`` is set):
+        routing map, quota ledger, shed counters, lazy per-tenant stats."""
+        return self._tenants
+
     # ------------------------------------------------------------ checkpoint
     def snapshot(self) -> dict:
         """JSON-able exact-seat frontier snapshot of the whole session:
@@ -469,8 +606,11 @@ class Fabric:
             sched = self._group.sched_state()
         else:
             sched = self._replica_set.state()
-        return {"config": self.config.to_json(), "step": self.step_count,
-                "sched": sched}
+        out = {"config": self.config.to_json(), "step": self.step_count,
+               "sched": sched}
+        if self._tenants is not None:
+            out["tenants"] = self._tenants.state()
+        return out
 
     def checkpoint(self, *, wait: bool = True) -> bool:
         """Write a frontier checkpoint now, outside the cadence. Returns
@@ -502,22 +642,33 @@ class Fabric:
         / ``checkpoint`` / ``obs`` / ``control`` sections. This is the one
         schema the controller, serve.py heartbeat and exporters all read;
         ``view.to_json()`` is the JSON-stable raw form."""
-        snap = self._replica_set.snapshot()
+        router = self._tenants
+        # Tenant fabrics emit only the *active* grid classes: the view
+        # stays O(active tenants), never O(declared) — idle groups cost
+        # nothing to report, exactly like they cost nothing to drain.
+        snap = self._replica_set.snapshot(active_only=router is not None)
+        shed_by = router.shed_by_class if router is not None else {}
         classes = {}
         slo = {}
-        for spec in self.config.classes:
-            cs = snap["classes"][spec.name]
-            classes[spec.name] = class_view_from_snapshot(spec.name, cs)
+        for name, cs in snap["classes"].items():
+            spec = self._spec_by_name[name]
+            classes[name] = class_view_from_snapshot(
+                name, cs, shed_by.get(name, 0))
             p99 = cs["admit_p99_ms"]
             ok = None if (spec.slo_ms is None or p99 is None) \
                 else p99 <= spec.slo_ms
-            slo[spec.name] = SloView(
+            slo[name] = SloView(
                 target_ms=spec.slo_ms,
                 admit_p99_ms=p99,
                 ok=ok,
                 headroom_ms=(None if spec.slo_ms is None or p99 is None
                              else spec.slo_ms - p99),
             )
+        tenants = None
+        if router is not None:
+            tenants = router.snapshot()
+            act = self._replica_set.scheduler.active
+            tenants["active_classes"] = 0 if act is None else len(act)
         checkpoint = None
         if self._ckpt is not None:
             checkpoint = {"written": list(self._ckpt.written),
@@ -540,6 +691,7 @@ class Fabric:
             obs=(_json_safe(self._obs_hub.snapshot())
                  if self._obs_hub is not None else None),
             control=self._control.snapshot(),
+            tenants=_json_safe(tenants) if tenants is not None else None,
         )
 
     def stats(self) -> dict:

@@ -55,6 +55,9 @@ class ClassStatsView:
     admit_p50_ms: Optional[float]
     admit_p99_ms: Optional[float]
     shard_depths: Tuple[int, ...] = ()
+    # 429-style admission sheds (tenant fabrics, lowest tier only) —
+    # additive optional field, no schema bump; 0 everywhere else.
+    shed: int = 0
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -101,6 +104,11 @@ class StatsView:
     checkpoint: Optional[dict] = None
     obs: Optional[dict] = None
     control: Optional[dict] = None
+    # tenant fabrics (DESIGN.md §16): declared/tracked/active counts,
+    # shed totals, quota occupancy, top-K tenants by backlog. With this
+    # section present, ``classes`` holds only the *active* grid classes —
+    # the emitted view is O(active), never O(declared tenants).
+    tenants: Optional[dict] = None
     schema_version: int = SCHEMA_VERSION
 
     def to_json(self) -> dict:
@@ -115,7 +123,7 @@ class StatsView:
             "replicas": self.replicas,
             "transport": self.transport,
         }
-        for key in ("checkpoint", "obs", "control"):
+        for key in ("checkpoint", "obs", "control", "tenants"):
             val = getattr(self, key)
             if val is not None:
                 out[key] = val
@@ -141,11 +149,13 @@ class StatsView:
             checkpoint=d.get("checkpoint"),
             obs=d.get("obs"),
             control=d.get("control"),
+            tenants=d.get("tenants"),
             schema_version=version,
         )
 
 
-def class_view_from_snapshot(name: str, snap: dict) -> ClassStatsView:
+def class_view_from_snapshot(name: str, snap: dict,
+                             shed: int = 0) -> ClassStatsView:
     """Build the typed per-class view from a raw ``ClassStats`` aggregate
     (``aggregate_class_snapshots`` output), dropping the reservoir."""
     return ClassStatsView(
@@ -159,4 +169,5 @@ def class_view_from_snapshot(name: str, snap: dict) -> ClassStatsView:
         admit_p50_ms=snap["admit_p50_ms"],
         admit_p99_ms=snap["admit_p99_ms"],
         shard_depths=tuple(snap["shard_depths"]),
+        shed=shed,
     )

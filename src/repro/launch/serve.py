@@ -20,6 +20,12 @@ session (DESIGN.md §10-11, §14).
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
       --replicas 4 --hosts 2 --verify-single-host
 
+  # ten-thousand-tenant fabric (DESIGN.md §16): 2000 declared tenants
+  # hashed onto 32 class groups, heavy-tailed traffic, per-tenant FIFO
+  # order asserted identical across host layouts:
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
+      --tenants 2000 --replicas 2 --hosts 2 --verify-single-host
+
   # closed-loop autoscaling (DESIGN.md §14): start at 1 replica, let the
   # controller grow toward --max-replicas under load ('--autoscale
   # dry-run' records decisions without actuating):
@@ -48,7 +54,17 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
     without --multitenant, a checkpoint cadence with nowhere to write,
     --checkpoint-dir shadowing --ckpt-dir, --hosts without enough replicas)
     raise FabricConfigError with the fix spelled out."""
-    from repro.fabric import ClassSpec, FabricConfig, tiered_classes
+    from repro.fabric import (ClassSpec, FabricConfig, FabricConfigError,
+                              TenantSpec, tiered_classes)
+    tenants = None
+    if getattr(args, "tenants", None):
+        if args.multitenant:
+            raise FabricConfigError(
+                "--tenants and --multitenant are exclusive: --tenants "
+                "derives its own group x tier class grid")
+        tenants = TenantSpec(num_tenants=args.tenants,
+                             num_groups=getattr(args, "tenant_groups", 32),
+                             page_quota=getattr(args, "tenant_quota", None))
     classes = tiered_classes() if args.multitenant else (ClassSpec("default"),)
     hosts = getattr(args, "hosts", 1)
     transport = getattr(args, "transport", "auto")
@@ -72,7 +88,8 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
             max_replicas = max(args.replicas * 2, hosts)
     return FabricConfig(
         obs=obs, control=control,
-        classes=classes, replicas=args.replicas, max_replicas=max_replicas,
+        classes=classes, tenants=tenants,
+        replicas=args.replicas, max_replicas=max_replicas,
         policy=args.policy,
         hosts=hosts, transport=transport,
         transport_drop=getattr(args, "transport_drop", 0.0),
@@ -87,20 +104,41 @@ def config_from_args(args) -> "FabricConfig":  # noqa: F821
         checkpoint_every_n_steps=args.checkpoint_every)
 
 
+def tenant_of_request(i: int, num_tenants: int) -> int:
+    """Deterministic heavy-tailed tenant popularity: hash the request index
+    to a log-uniform draw over [0, T) — a handful of tenants get most of
+    the traffic, the long tail gets a trickle, and the mapping is identical
+    across host layouts (no RNG state to diverge)."""
+    h = (i * 2654435761) & 0xFFFFFFFF  # Knuth multiplicative hash
+    u = h / 2 ** 32
+    return int(num_tenants ** u) - 1 if num_tenants > 1 else 0
+
+
 def run_workload(fab, args):
     """Submit the flag-shaped request wave and drain it, recording the
     *completion order* (the delivery-order signal --verify-single-host
-    compares across host layouts)."""
+    compares across host layouts). All requests are submitted before any
+    step runs, so admission decisions (including tenant sheds) are
+    layout-independent."""
     uids, tenant_of = [], {}
+    num_tenants = getattr(args, "tenants", None)
     for i in range(args.requests):
         plen = 3 + i % 5
         prompt = [(7 * i + j) % (fab.model_cfg.vocab_size - 1) + 1
                   for j in range(plen)]
-        qclass = TENANTS[i % 3] if args.multitenant else None
-        uid = fab.submit(prompt, max_new_tokens=args.max_new, qclass=qclass)
+        if num_tenants:
+            tid = tenant_of_request(i, num_tenants)
+            uid = fab.submit(prompt, max_new_tokens=args.max_new,
+                             tenant=f"t{tid}", tier=TENANTS[i % 3])
+            label = f"t{tid}"
+        else:
+            qclass = TENANTS[i % 3] if args.multitenant else None
+            uid = fab.submit(prompt, max_new_tokens=args.max_new,
+                             qclass=qclass)
+            label = qclass or "default"
         if uid is not None:
             uids.append(uid)
-            tenant_of[uid] = qclass or "default"
+            tenant_of[uid] = label
     order = []
     interval = getattr(args, "stats_interval", None)
     for step in range(1, 2001):
@@ -130,6 +168,13 @@ def verify_single_host(args, config) -> None:
     # frontier checkpoints with the synthetic verify workload.
     config = dataclasses.replace(config, checkpoint_dir=None,
                                  checkpoint_every_n_steps=None)
+    if config.tenants is not None:
+        # Pin the quota ledger's host-cap split to the multi-host layout so
+        # quota admission decisions are identical in both runs (otherwise
+        # hosts=1 pools the whole budget and can admit what hosts=N sheds).
+        config = dataclasses.replace(
+            config, tenants=dataclasses.replace(
+                config.tenants, quota_hosts=config.hosts))
     runs = {}
     for label, cfg in (("multi", config),
                        ("single", dataclasses.replace(
@@ -188,6 +233,20 @@ def build_parser() -> argparse.ArgumentParser:
     work.add_argument("--multitenant", action="store_true",
                       help="3 priority classes (interactive/batch/"
                            "background) instead of one FIFO queue")
+    work.add_argument("--tenants", type=int, default=None, metavar="N",
+                      help="tenant fabric: declare N tenants hashed onto "
+                           "--tenant-groups class groups (3 tiers each, "
+                           "hierarchical drain, O(active) cost); requests "
+                           "get heavy-tailed tenant popularity and "
+                           "--verify-single-host checks per-tenant FIFO "
+                           "order")
+    work.add_argument("--tenant-groups", type=int, default=32, metavar="G",
+                      help="class groups the tenant hash space maps onto "
+                           "(with --tenants; default 32)")
+    work.add_argument("--tenant-quota", type=int, default=None, metavar="P",
+                      help="per-tenant KV page quota (with --tenants); "
+                           "over-quota admissions are denied, lowest tier "
+                           "counts them as 429-style sheds")
     work.add_argument("--verify-single-host", action="store_true",
                       help="run the workload under --hosts N and under one "
                            "host and assert identical per-class delivery "
@@ -233,9 +292,11 @@ def build_parser() -> argparse.ArgumentParser:
                              "kept in flight per (class, shard); 1 = "
                              "synchronous request/response")
     fabric.add_argument("--policy", nargs="?", const="wfq", default="strict",
-                        choices=("strict", "wfq", "fifo"),
+                        choices=("strict", "wfq", "fifo", "hier"),
                         help="cross-class drain policy (with "
-                             "--multitenant); bare --policy = wfq")
+                             "--multitenant/--tenants); bare --policy = "
+                             "wfq; --tenants defaults to hier (WFQ across "
+                             "groups, strict within)")
     fabric.add_argument("--device-admission", dest="device_admission",
                         nargs="?", const=True, default=False,
                         type=lambda s: {"true": True, "false": False,
@@ -399,6 +460,19 @@ def main() -> None:
                   f"requeued={cs.requeued} p50_ms={cs.admit_p50_ms} "
                   f"p99_ms={cs.admit_p99_ms} "
                   f"slo_target_ms={slo.target_ms} slo_ok={slo.ok}")
+    if args.tenants:
+        tv = view.tenants or {}
+        tot = tv.get("totals", {})
+        print(f"[serve] tenants: declared={tv.get('declared')} "
+              f"groups={tv.get('groups')} tracked={tv.get('tracked')} "
+              f"active_classes={tv.get('active_classes')} "
+              f"submitted={tot.get('submitted')} "
+              f"delivered={tot.get('delivered')} shed={tot.get('shed')} "
+              f"rejected={tot.get('rejected')}")
+        for row in tv.get("top", []):
+            print(f"[serve]   top tenant {row['tenant']}: "
+                  f"backlog={row['backlog']} submitted={row['submitted']} "
+                  f"delivered={row['delivered']}")
     if args.autoscale:
         ctl = view.control or {}
         print(f"[serve] control: decisions={ctl.get('decisions', 0)} "

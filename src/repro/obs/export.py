@@ -137,7 +137,7 @@ _COUNTER_KEYS = {
     "empty_drains", "remote_msgs", "remote_bytes", "drops", "delayed",
     "reordered", "retransmits", "remote_claims", "fetches", "publishes",
     "kernel_calls", "pushed", "claimed", "steps", "dropped", "count",
-    "pool_allocated",
+    "pool_allocated", "shed",
 }
 
 
@@ -205,6 +205,17 @@ def prometheus_text(stats, gauges: Optional[dict] = None) -> str:
     for key in ("step", "num_replicas", "resizes"):
         if key in stats:
             series.append((_prom_name(key), "", stats[key], "gauge"))
+    tenants = stats.get("tenants") or {}
+    for key in ("declared", "groups", "tracked", "active_backlog",
+                "active_classes", "shed_total"):
+        val = tenants.get(key)
+        if isinstance(val, (int, float)) and not isinstance(val, bool):
+            typ = "counter" if key == "shed_total" else "gauge"
+            series.append((_prom_name(f"tenants_{key}"), "", val, typ))
+    for tot_key, tot_val in (tenants.get("totals") or {}).items():
+        if isinstance(tot_val, (int, float)) and not isinstance(tot_val, bool):
+            series.append((_prom_name(f"tenants_total_{tot_key}"), "",
+                           tot_val, "counter"))
     obs = stats.get("obs", {})
     for rid, rec in obs.get("recorders", {}).items():
         label = f'{{rid="{rid}"}}'

@@ -85,9 +85,16 @@ def sample_fabric_gauges(replica_set, engines=(), hub=None) -> dict:
     """One full gauge sweep over a fabric: per-class CMP protection view,
     per-engine admission-ring depth, transport RTT/retry. This is the dict
     the :class:`~repro.obs.hub.MetricsHub` appends to its rolling window."""
+    sched = replica_set.scheduler
+    act = getattr(sched, "active", None)
+    # Tenant fabrics track an active-class set: sweep only classes that
+    # currently hold work, so the gauge cost is O(active), not O(declared)
+    # — a 10k-tenant grid with 100 hot groups samples ~300 classes, not
+    # 30k. Without active tracking (act is None) sweep everything.
+    classes = (sched.classes if act is None
+               else [sched.by_name[n] for n in act.names()])
     out: dict = {
-        "classes": {qc.name: sample_class_shards(qc)
-                    for qc in replica_set.scheduler.classes},
+        "classes": {qc.name: sample_class_shards(qc) for qc in classes},
         "transport": sample_transport(replica_set.transport, hub),
         "pending": replica_set.pending(),
     }

@@ -18,18 +18,25 @@ queue fabric (DESIGN.md §8).
     injectable drop/delay/reorder chaos).
   - :mod:`repro.sched.stats`   — per-class occupancy/latency/steal telemetry
     sampled from domain state, zero added atomics.
+  - :mod:`repro.sched.tenants` — O(active)-cost tenant scale (DESIGN.md
+    §16): hashed tenant->class-group routing, the active-set index, lazy
+    per-tenant stats, and per-tenant KV page quotas.
 """
 
 from repro.sched.classes import (Envelope, QueueClass, Scheduler, ShardSet,
                                  shard_for)
-from repro.sched.policy import (ClassFifo, DrainPolicy, StrictPriority,
-                                WeightedFair, make_policy)
+from repro.sched.policy import (ClassFifo, DrainPolicy, HierarchicalWFQ,
+                                StrictPriority, WeightedFair, make_policy)
 from repro.sched.replica import (ClassView, ReplicaSet, SchedulerReplica,
                                  ShardSeat)
 from repro.sched.stats import (ClassStats, LatencyWindow,
                                aggregate_class_snapshots)
 from repro.sched.steal import (ShardConsumer, claim_seat, queue_depth,
                                rebalance, steal_into)
+from repro.sched.tenants import (TIERS, ActiveSet, TenantMap,
+                                 TenantQuotaLedger, TenantRouter,
+                                 TenantStatsTable, group_class_name,
+                                 split_class_name, tenant_hash)
 from repro.sched.transport import (HostAddr, LocalTransport,
                                    SimHostTransport, Transport,
                                    decode_owner, make_transport)
@@ -37,9 +44,12 @@ from repro.sched.transport import (HostAddr, LocalTransport,
 __all__ = [
     "Envelope", "QueueClass", "Scheduler", "ShardSet", "shard_for",
     "DrainPolicy", "StrictPriority", "WeightedFair", "ClassFifo",
-    "make_policy", "ClassStats", "LatencyWindow", "aggregate_class_snapshots",
+    "HierarchicalWFQ", "make_policy",
+    "ClassStats", "LatencyWindow", "aggregate_class_snapshots",
     "ShardConsumer", "queue_depth", "rebalance", "steal_into", "claim_seat",
     "ClassView", "ReplicaSet", "SchedulerReplica", "ShardSeat",
+    "TIERS", "ActiveSet", "TenantMap", "TenantQuotaLedger", "TenantRouter",
+    "TenantStatsTable", "group_class_name", "split_class_name", "tenant_hash",
     "HostAddr", "LocalTransport", "SimHostTransport", "Transport",
     "decode_owner", "make_transport",
 ]

@@ -163,6 +163,13 @@ class QueueClass:
     # so every lifecycle emit site agrees on which envelopes are traced.
     _obs = None
 
+    # active-set attachment (repro.sched.tenants): None until a tenant
+    # fabric enables O(active) tracking via Scheduler.enable_active_
+    # tracking() — same discipline as _obs, one `is None` check when off.
+    # Producers mark AFTER their item is visible in a shard, so a retire
+    # sweep can never strand an item (see ActiveSet).
+    _active = None
+
     # ------------------------------------------------------------- producers
     def pending(self) -> int:
         """Items submitted but not yet first-delivered (+ requeued)."""
@@ -185,6 +192,9 @@ class QueueClass:
         seq = self._seq.fetch_add(1)
         env = Envelope(seq, stamp, time.monotonic(), payload)
         self.shards.queues[seq % len(self.shards)].enqueue(env)
+        act = self._active
+        if act is not None:
+            act.mark(self.name)  # after the enqueue: never strands the item
         self.stats.add_submitted()
         rec = self._obs
         if rec is not None and rec.sampled(seq):
@@ -225,6 +235,9 @@ class QueueClass:
             group = envs[(s - base) % S::S] if S > 1 else envs
             if group:
                 self.shards.queues[s].enqueue_many(group)
+        act = self._active
+        if act is not None:
+            act.mark(self.name)
         self.stats.add_submitted(n)
         if len(payloads) > n:
             self.stats.add_rejected(len(payloads) - n)
@@ -242,6 +255,9 @@ class QueueClass:
         park) to the class. It re-enters at its *original* cycle position:
         the requeue heap is served before the frontier, ordered by seq."""
         heapq.heappush(self._requeue, env)
+        act = self._active
+        if act is not None:
+            act.mark(self.name)
         self.stats.requeued += 1
         rec = self._obs
         if rec is not None and rec.sampled(env.seq):
@@ -445,10 +461,30 @@ class Scheduler:
         assert len(self.by_name) == len(self.classes), "duplicate class names"
         self.policy = make_policy(policy)
         self._stamp = AtomicCell(0)  # fabric-global arrival cycle
+        # O(active) index (sched/tenants.py), None unless a tenant fabric
+        # enables it: with it set, drain/pending/snapshot walk only the
+        # classes that currently hold work instead of the whole grid.
+        self.active = None
 
     @property
     def default_class(self) -> str:
         return self.classes[0].name
+
+    def enable_active_tracking(self):
+        """Switch drain/pending/snapshot to O(active classes).
+
+        Attached post-construction (like the obs recorder) so none of the
+        construction paths — direct, from_state, replica rebuild — need
+        threading a flag. All classes start marked; the first drain sweep
+        retires the idle ones, after which only classes with queued work
+        are ever touched."""
+        if self.active is None:
+            from repro.sched.tenants import ActiveSet
+            self.active = ActiveSet()
+            for qc in self.classes:
+                qc._active = self.active
+                self.active.mark(qc.name)
+        return self.active
 
     def submit(self, qclass: str, payload: Any) -> Optional[Envelope]:
         return self.by_name[qclass].submit(payload,
@@ -461,8 +497,19 @@ class Scheduler:
                               stamp=self._stamp.fetch_add(len(payloads)))
 
     def drain(self, k: int) -> List[Tuple[QueueClass, Envelope]]:
-        """One admission batch: the policy composes per-class drains."""
-        return self.policy.drain(self.classes, k)
+        """One admission batch: the policy composes per-class drains.
+        With active tracking on, only classes holding work are offered to
+        the policy, and classes observed empty afterwards leave the
+        active set (a racing producer re-marks them post-enqueue)."""
+        act = self.active
+        if act is None:
+            return self.policy.drain(self.classes, k)
+        offered = [self.by_name[n] for n in act.names()]
+        out = self.policy.drain(offered, k)
+        for qc in offered:
+            if qc.pending() == 0:
+                act.discard(qc.name)
+        return out
 
     def drain_bulk(self, k: int) -> List[Tuple[QueueClass, Envelope]]:
         """Bulk admission drain for the device-admission feeder (DESIGN.md
@@ -476,7 +523,15 @@ class Scheduler:
         return self.drain(k)
 
     def pending(self) -> int:
+        act = self.active
+        if act is not None:
+            # inactive => pending 0 by the mark-after-enqueue invariant
+            return (sum(self.by_name[n].pending() for n in act.names())
+                    + self.policy.held())
         return sum(c.pending() for c in self.classes) + self.policy.held()
 
-    def snapshot(self) -> dict:
+    def snapshot(self, *, active_only: bool = False) -> dict:
+        if active_only and self.active is not None:
+            return {n: self.by_name[n].snapshot()
+                    for n in self.active.names()}
         return {c.name: c.snapshot() for c in self.classes}

@@ -21,7 +21,9 @@ within a class the frontier drain already fixed the order.
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+import heapq
+
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.sched.classes import Envelope, QueueClass
 
@@ -62,9 +64,23 @@ class DrainPolicy:
 class StrictPriority(DrainPolicy):
     honors_priority = True
 
+    def __init__(self):
+        # Priority order cached per class-set: the set is stable between
+        # calls (same Scheduler, or same active subset), so the common
+        # case pays an O(C) identity check instead of an O(C log C) sort.
+        self._order_key: Optional[Tuple[int, ...]] = None
+        self._order: List[QueueClass] = []
+
+    def _ordered(self, classes: Sequence[QueueClass]) -> List[QueueClass]:
+        key = tuple(map(id, classes))
+        if key != self._order_key:
+            self._order = sorted(classes, key=lambda c: -c.priority)
+            self._order_key = key
+        return self._order
+
     def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
         out: Drained = []
-        for qc in sorted(classes, key=lambda c: -c.priority):
+        for qc in self._ordered(classes):
             if len(out) >= k:
                 break
             out.extend((qc, env) for env in qc.drain(k - len(out)))
@@ -134,6 +150,13 @@ class ClassFifo(DrainPolicy):
 
     def __init__(self):
         self._heads: Dict[str, Tuple[QueueClass, Envelope]] = {}
+        # Min-heap of (stamp, name) mirroring _heads with lazy deletion:
+        # take_held()/supersession leave stale entries behind, and drain
+        # skips any popped entry whose stamp no longer matches the live
+        # head. One drain is O(C + k log C) — the per-class top-up runs
+        # once per call, and each emitted item refills only its own
+        # class — instead of the old O(C·k) min-scan per item.
+        self._heap: List[Tuple[int, str]] = []
 
     def held(self) -> int:
         return len(self._heads)
@@ -144,20 +167,133 @@ class ClassFifo(DrainPolicy):
     def take_held(self) -> Drained:
         out = list(self._heads.values())
         self._heads.clear()
+        self._heap.clear()
         return out
+
+    def _fill(self, qc: QueueClass) -> None:
+        got = qc.drain(1)
+        if got:
+            self._heads[qc.name] = (qc, got[0])
+            heapq.heappush(self._heap, (got[0].stamp, qc.name))
 
     def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
         out: Drained = []
-        while len(out) < k:
+        for qc in classes:
+            if qc.name not in self._heads:
+                self._fill(qc)
+        while len(out) < k and self._heap:
+            stamp, name = heapq.heappop(self._heap)
+            entry = self._heads.get(name)
+            if entry is None or entry[1].stamp != stamp:
+                continue  # stale heap entry (head taken or superseded)
+            del self._heads[name]
+            out.append(entry)
+            self._fill(entry[0])
+        return out
+
+
+class HierarchicalWFQ(DrainPolicy):
+    """Two-level drain for the tenant fabric (DESIGN.md §16): deficit
+    round robin *across class groups* (equal shares — groups are hash
+    buckets of tenants, so fairness between buckets is fairness between
+    tenant populations), strict priority *within* a group (interactive
+    beats batch beats background for the tenants sharing the bucket).
+
+    Groups are recovered from the class-name prefix before ``:`` (the
+    ``g017:interactive`` convention from sched/tenants.py); a class
+    without a prefix forms its own group. The group partition and each
+    group's priority order are cached per class-set, so with an active-
+    set filter a drain touches only backlogged groups.
+
+    ``honors_priority`` stays False: admission is weight-driven across
+    groups, so a priority-evicted lane could be immediately re-admitted.
+    """
+
+    def __init__(self, quantum: float = 1.0):
+        self.quantum = float(quantum)
+        self._deficit: Dict[str, float] = {}
+        self._cache_key: Optional[Tuple[int, ...]] = None
+        self._groups: List[Tuple[str, List[QueueClass]]] = []
+
+    def _grouped(self, classes: Sequence[QueueClass]):
+        key = tuple(map(id, classes))
+        if key != self._cache_key:
+            by_key: Dict[str, List[QueueClass]] = {}
             for qc in classes:
-                if qc.name not in self._heads:
-                    got = qc.drain(1)
-                    if got:
-                        self._heads[qc.name] = (qc, got[0])
-            if not self._heads:
+                by_key.setdefault(qc.name.partition(":")[0], []).append(qc)
+            self._groups = [
+                (gkey, sorted(members, key=lambda c: -c.priority))
+                for gkey, members in by_key.items()]
+            self._cache_key = key
+        return self._groups
+
+    @staticmethod
+    def _drain_group(members: List[QueueClass], k: int) -> Drained:
+        out: Drained = []
+        for qc in members:  # already priority-sorted
+            if len(out) >= k:
                 break
-            name = min(self._heads, key=lambda n: self._heads[n][1].stamp)
-            out.append(self._heads.pop(name))
+            out.extend((qc, env) for env in qc.drain(k - len(out)))
+        return out
+
+    def drain(self, classes: Sequence[QueueClass], k: int) -> Drained:
+        # No pending() pre-sweep: with an active-set filter the offered
+        # groups almost all hold work, so probing every member first costs
+        # O(active x tiers) atomic loads per step for nothing. A group
+        # that turns out dry forfeits its deficit the first time its
+        # quantum comes up empty (the ran-dry reset below) — same
+        # no-hoarding guarantee, paid only by groups that are actually
+        # empty.
+        out: Drained = []
+        backlogged = self._grouped(classes)
+        if not backlogged:
+            return out
+        share = self.quantum * k / len(backlogged)
+        for gkey, _ in backlogged:
+            d = self._deficit.get(gkey, 0.0) + share
+            self._deficit[gkey] = min(d, 2.0 * share + 1.0)  # burst cap
+        dry = {}  # groups observed empty this call: no point re-probing
+        dry_passes = 0
+        for _ in range(2 * k + len(backlogged) + 2):
+            if len(out) >= k:
+                break
+            progressed = False
+            for gkey, members in backlogged:
+                if len(out) >= k:
+                    break
+                if gkey in dry:
+                    continue
+                take = min(k - len(out), int(self._deficit[gkey]))
+                got = self._drain_group(members, take) if take > 0 else []
+                self._deficit[gkey] -= len(got)
+                if take > 0 and len(got) < take:
+                    self._deficit[gkey] = 0.0  # ran dry mid-quantum
+                    dry[gkey] = True
+                if got:
+                    progressed = True
+                    out.extend(got)
+            if progressed:
+                dry_passes = 0
+                continue
+            # Work-conserving re-credit: every deficit may be fractional
+            # (many groups, small k) while some group still holds items —
+            # classic DRR runs more rounds until the budget is spent, so
+            # grant another share and retry; two consecutive no-progress
+            # passes mean everything offered is actually dry.
+            dry_passes += 1
+            if dry_passes >= 2:
+                break
+            for gkey, _ in backlogged:
+                if gkey not in dry:
+                    self._deficit[gkey] += share
+        if not out:
+            # All deficits still fractional (many groups, small k): grant
+            # the largest creditor one item so every call makes progress.
+            gkey, members = max(backlogged,
+                                key=lambda g: self._deficit[g[0]])
+            got = self._drain_group(members, 1)
+            self._deficit[gkey] -= len(got)
+            out.extend(got)
         return out
 
 
@@ -165,11 +301,12 @@ _POLICIES = {
     "strict": StrictPriority,
     "wfq": WeightedFair,
     "fifo": ClassFifo,
+    "hier": HierarchicalWFQ,
 }
 
 
 def make_policy(policy) -> DrainPolicy:
-    """Accept a policy instance or one of the names: strict | wfq | fifo."""
+    """Accept a policy instance or a name: strict | wfq | fifo | hier."""
     if isinstance(policy, DrainPolicy):
         return policy
     try:

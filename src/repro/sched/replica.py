@@ -64,6 +64,11 @@ from repro.sched.stats import ClassStats, aggregate_class_snapshots
 from repro.sched.transport import (HostAddr, LocalTransport, Transport,
                                    decode_owner, wire_decode, wire_encode)
 
+# Active-set retirement sweep cadence (rebalance calls between sweeps).
+# The sweep is O(active x replicas) pending() probes; a stale entry only
+# costs one empty policy visit per drain, so amortizing it is pure win.
+_RETIRE_EVERY = 8
+
 
 class ShardSeat:
     """Ownership + delivery cursor for one (class, shard) pair.
@@ -157,6 +162,9 @@ class ClassView:
         roll-up with its old owner."""
         with self._handoff_lock:
             self._handoff.append(env)
+        act = self.qclass._active
+        if act is not None:
+            act.mark(self.name)  # after the append: never strands the item
 
     def _absorb_handoff(self) -> None:
         if self._handoff:  # racy peek is fine: a miss is absorbed next round
@@ -171,6 +179,9 @@ class ClassView:
         heap, served before any frontier seat — exactly the QueueClass
         contract, replica-local."""
         heapq.heappush(self._requeue, env)
+        act = self.qclass._active
+        if act is not None:
+            act.mark(self.name)
         self.stats.requeued += 1
         rec = self._obs
         if rec is not None and rec.sampled(env.seq):
@@ -309,6 +320,16 @@ class SchedulerReplica:
     def classes(self) -> List[ClassView]:
         return self.views
 
+    def _offered(self) -> List[ClassView]:
+        """Views offered to the policy / scans: all of them, or — with the
+        fabric's active tracking on — only classes that currently hold
+        work (the mark-after-enqueue invariant makes the filter safe; a
+        racing producer's class shows up by the next call)."""
+        act = self.scheduler.active
+        if act is None:
+            return self.views
+        return [self.by_name[n] for n in act.names()]
+
     @property
     def default_class(self) -> str:
         return self.scheduler.default_class
@@ -330,7 +351,7 @@ class SchedulerReplica:
         try:
             if not self.alive:
                 return []
-            got = self.policy.drain(self.views, k)
+            got = self.policy.drain(self._offered(), k)
         finally:
             self._in_drain = False
         if not got:
@@ -338,10 +359,11 @@ class SchedulerReplica:
         return got
 
     def pending(self) -> int:
-        return sum(v.pending() for v in self.views) + self.policy.held()
+        return sum(v.pending() for v in self._offered()) + self.policy.held()
 
-    def snapshot(self) -> dict:
-        return {v.name: v.snapshot() for v in self.views}
+    def snapshot(self, *, active_only: bool = False) -> dict:
+        views = self._offered() if active_only else self.views
+        return {v.name: v.snapshot() for v in views}
 
     # ---- stealing ---------------------------------------------------------
     def steal_if_starved(self) -> int:
@@ -380,7 +402,7 @@ class SchedulerReplica:
         id: distinct thieves disperse across distinct runs with no shared
         scan state."""
         cands = []
-        for v in self.views:
+        for v in self._offered():
             for s, seat in enumerate(v.seats):
                 owner = seat.owner.load()
                 if owner == self.addr:
@@ -428,6 +450,7 @@ class ReplicaSet:
         self.min_steal = int(min_steal)
         self.resizes = 0
         self.host_failures = 0
+        self._retire_tick = 0
         # per-class roll-up of retired replicas' stats (resize survivors)
         self._retired: Dict[str, dict] = {}
         self.seats: Dict[str, List[ShardSeat]] = {}
@@ -461,8 +484,27 @@ class ReplicaSet:
         return sum(r.pending() for r in self.replicas)
 
     def rebalance(self) -> int:
-        """One steal pass: every starved live replica claims one deep run."""
+        """One steal pass: every starved live replica claims one deep run.
+        With active tracking on, the same pass retires drained-empty
+        classes from the active set (a class is only fabric-empty when
+        every replica's view of it is empty — no single drain loop can
+        decide that, so the sweep lives here at the set level)."""
+        self._retire_tick += 1
+        if self._retire_tick % _RETIRE_EVERY == 0:
+            self._retire_idle()
         return sum(r.steal_if_starved() for r in self.replicas if r.alive)
+
+    def _retire_idle(self) -> None:
+        # O(active x replicas) pending() probes — correct every step, but
+        # retirement is purely an optimization (a stale active entry costs
+        # one empty policy visit), so the sweep runs every _RETIRE_EVERY
+        # rebalances instead of all of them.
+        act = self.scheduler.active
+        if act is None:
+            return
+        for name in act.names():
+            if all(r.by_name[name].pending() == 0 for r in self.replicas):
+                act.discard(name)
 
     def live_replicas(self) -> List[SchedulerReplica]:
         return [r for r in self.replicas if r.alive]
@@ -619,7 +661,7 @@ class ReplicaSet:
         self.host_failures += 1
         return moved
 
-    def snapshot(self) -> dict:
+    def snapshot(self, *, active_only: bool = False) -> dict:
         out: dict = {"replicas": {}, "classes": {},
                      "transport": self.transport.stats()}
         for r in self.replicas:
@@ -627,9 +669,14 @@ class ReplicaSet:
                 "host": r.addr.host, "alive": r.alive,
                 "steals": r.steals, "stolen_cycles": r.stolen_cycles,
                 "empty_drains": r.empty_drains, "pending": r.pending(),
-                "classes": r.snapshot(),
+                "classes": r.snapshot(active_only=active_only),
             }
-        for qc in self.scheduler.classes:
+        act = self.scheduler.active
+        if active_only and act is not None:
+            classes = [self.scheduler.by_name[n] for n in act.names()]
+        else:
+            classes = self.scheduler.classes
+        for qc in classes:
             snaps = [r.by_name[qc.name].snapshot() for r in self.replicas]
             if qc.name in self._retired:  # counters from pre-resize replicas
                 snaps.append(self._retired[qc.name])

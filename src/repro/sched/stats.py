@@ -46,6 +46,11 @@ class LatencyWindow:
         self._buf: List[float] = []
         self._idx = 0
         self.count = 0  # total samples ever recorded
+        # Sorted view of _buf, rebuilt lazily by percentile() and
+        # invalidated on every record: stats() at tenant scale reads
+        # several percentiles per class per interval, and re-sorting the
+        # full ring for each read is the dominant telemetry cost.
+        self._sorted: Optional[List[float]] = None
 
     def record(self, seconds: float) -> None:
         if len(self._buf) < self.capacity:
@@ -54,6 +59,7 @@ class LatencyWindow:
             self._buf[self._idx] = seconds
             self._idx = (self._idx + 1) % self.capacity
         self.count += 1
+        self._sorted = None
 
     def record_many(self, samples: List[float]) -> None:
         """Batched append with slice-assigned wraparound (the bulk-drain
@@ -64,6 +70,7 @@ class LatencyWindow:
         cap = self.capacity
         buf = self._buf
         self.count += len(samples)
+        self._sorted = None
         if len(samples) >= cap:
             self._buf = list(samples[-cap:])
             self._idx = 0
@@ -87,14 +94,18 @@ class LatencyWindow:
             self._idx = rest
 
     def percentile(self, p: float) -> Optional[float]:
-        """p in [0, 100]; None when empty. Snapshot-sorts the ring (cheap at
-        telemetry cadence, never on the hot path). Linear interpolation
-        between closest ranks (numpy's default), not nearest-rank: at small
-        sample counts nearest-rank rounding can move a p99 by a whole sample
-        step, which is exactly the regime the SLO view reads."""
+        """p in [0, 100]; None when empty. Sorts a snapshot of the ring
+        once and caches it until the next record — consecutive percentile
+        reads (p50 then p99 per class, across many classes per stats
+        interval) share one sort. Linear interpolation between closest
+        ranks (numpy's default), not nearest-rank: at small sample counts
+        nearest-rank rounding can move a p99 by a whole sample step,
+        which is exactly the regime the SLO view reads."""
         if not self._buf:
             return None
-        return _interp_percentile(sorted(self._buf), p)
+        if self._sorted is None or len(self._sorted) != len(self._buf):
+            self._sorted = sorted(self._buf)
+        return _interp_percentile(self._sorted, p)
 
     def samples(self) -> List[float]:
         """Copy of the retained reservoir contents (unordered, seconds).

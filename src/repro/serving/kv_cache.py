@@ -58,6 +58,21 @@ class PagedKVPool:
         self.k_pages = jnp.zeros((self.layers, num_pages, kv, page_size, hd), dt)
         self.v_pages = jnp.zeros((self.layers, num_pages, kv, page_size, hd), dt)
         self.pool = sp.make(num_pages)
+        # Optional tenant quota ledger (duck-typed: charge/credit, see
+        # repro.sched.tenants.TenantQuotaLedger — kept out of the
+        # constructor so engines stay ledger-agnostic). When attached,
+        # alloc_for/retire_for meter per-tenant page occupancy against it;
+        # the plain alloc/retire paths are untouched.
+        self.ledger = None
+
+    def attach_ledger(self, ledger, host: int = 0) -> None:
+        """Attach a per-tenant page-quota ledger (any object with
+        ``charge(tenant, host, pages) -> bool`` /
+        ``credit(tenant, host, pages)``). Engine code keeps calling
+        ``alloc``/``retire``; tenant-aware callers use
+        ``alloc_for``/``retire_for`` instead."""
+        self.ledger = ledger
+        self._ledger_host = int(host)
 
     # ------------------------------------------------------------------
     def tick(self, step: int) -> None:
@@ -75,6 +90,32 @@ class PagedKVPool:
         the window elapses. Never blocks; never coordinates."""
         valid = ids < self.num_pages
         self.pool = sp.claim_ids(self.pool, ids, valid)
+
+    # ---------------------------------------------------- tenant metering
+    def alloc_for(self, tenant, n: int) -> Tuple[jax.Array, jax.Array]:
+        """Tenant-metered ``alloc``: charge the attached ledger before
+        touching the pool, so a tenant over quota is denied without
+        consuming a produce cycle. Denials return (empty, empty) — the
+        same shape callers already handle for a dry pool. Without a
+        ledger this is exactly ``alloc``."""
+        if self.ledger is not None and n > 0:
+            if not self.ledger.charge(tenant, self._ledger_host, n):
+                empty = jnp.zeros((0,), jnp.int32)
+                return empty, empty
+        ids, valid = self.alloc(n)
+        if self.ledger is not None and n > 0:
+            granted = int(jnp.sum(valid))
+            if granted < n:  # pool dry: give back the unfilled estimate
+                self.ledger.credit(tenant, self._ledger_host, n - granted)
+        return ids, valid
+
+    def retire_for(self, tenant, ids: jax.Array) -> None:
+        """Tenant-metered ``retire``: credit the ledger for every page
+        actually returned. Without a ledger this is exactly ``retire``."""
+        pages = int(jnp.sum(ids < self.num_pages))
+        self.retire(ids)
+        if self.ledger is not None and pages > 0:
+            self.ledger.credit(tenant, self._ledger_host, pages)
 
     # ------------------------------------------------------------------
     def free_pages(self) -> int:

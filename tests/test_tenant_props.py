@@ -1,0 +1,76 @@
+"""Property tests for tenant routing (CI slow lane; hypothesis is not a
+runtime dep, so the whole module skips where it is missing).
+
+The invariants that carry the tenant fabric's exactness argument:
+
+* routing is a pure function of (tenant, num_groups, salt) — identical
+  across processes and across a state()/from_state() round trip, for any
+  hashable tenant spelling;
+* every routed class name is on the declared grid and parses back to the
+  (group, tier) that produced it;
+* the quota ledger never goes negative and conserves host totals across
+  any charge/credit/rehost interleaving.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.sched import (TIERS, TenantMap, TenantQuotaLedger,  # noqa: E402
+                         group_class_name, split_class_name)
+
+pytestmark = pytest.mark.slow
+
+_tenants = (st.text(max_size=24) | st.integers(-2**40, 2**40)
+            | st.tuples(st.text(max_size=6), st.integers(0, 99)))
+
+
+@given(_tenants, st.integers(1, 512), st.integers(0, 2**32))
+@settings(max_examples=300, deadline=None)
+def test_routing_survives_state_roundtrip(tenant, groups, salt):
+    m = TenantMap(num_tenants=10**6, num_groups=groups, salt=salt)
+    m2 = TenantMap.from_state(m.state())
+    gid = m.group_of(tenant)
+    assert 0 <= gid < groups
+    assert m2.group_of(tenant) == gid
+    for tier in TIERS:
+        name = m.class_of(tenant, tier)
+        assert name == m2.class_of(tenant, tier) == group_class_name(gid, tier)
+        assert split_class_name(name)[1] == tier
+
+
+@given(st.lists(_tenants, min_size=1, max_size=64), st.integers(1, 64))
+@settings(max_examples=200, deadline=None)
+def test_grid_is_bounded_by_groups_not_tenants(tenants, groups):
+    m = TenantMap(num_tenants=10**9, num_groups=groups)
+    names = {m.class_of(t, TIERS[0]) for t in tenants}
+    assert names <= set(m.class_names())
+    assert len(m.class_names()) == groups * len(TIERS)
+
+
+@given(st.integers(1, 8),
+       st.lists(st.tuples(st.integers(0, 15), st.integers(0, 7),
+                          st.integers(0, 20), st.booleans()),
+                max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_ledger_conserves_and_never_goes_negative(hosts, ops):
+    led = TenantQuotaLedger(per_tenant=30, total=64, num_hosts=hosts)
+    outstanding = {}
+    for tid, host, pages, is_credit in ops:
+        key, h = f"t{tid}", host % led.num_hosts
+        if is_credit:
+            take = min(pages, outstanding.get((key, h), 0))
+            led.credit(key, h, take)
+            outstanding[(key, h)] = outstanding.get((key, h), 0) - take
+        elif led.charge(key, h, pages):
+            outstanding[(key, h)] = outstanding.get((key, h), 0) + pages
+        assert led.used(key) >= 0
+        assert all(0 <= led.host_used(i) <= led.host_caps[i]
+                   for i in range(led.num_hosts))
+    assert sum(led.host_used(i) for i in range(led.num_hosts)) == \
+        sum(outstanding.values())
+    led.rehost(max(1, hosts // 2))
+    assert sum(led.host_caps) == 64
+    assert sum(led.host_used(i) for i in range(led.num_hosts)) == \
+        sum(outstanding.values())

@@ -1,0 +1,443 @@
+"""Ten-thousand-tenant fabric (ISSUE 10, DESIGN.md §16): hashed
+tenant->group routing, the active-set index, lazy per-tenant stats,
+page-quota admission with 429-style shedding, the hierarchical drain,
+and the policy/telemetry hot-path caches that keep every step O(active).
+
+Everything here is deterministic (FNV routing, single-threaded drains);
+the randomized TenantMap properties live in test_tenant_props.py behind
+a hypothesis importorskip."""
+
+import json
+
+import pytest
+
+from repro.fabric import Fabric, FabricConfig, TenantSpec
+from repro.fabric.config import FabricConfigError
+from repro.sched import (ActiveSet, ClassFifo, HierarchicalWFQ, QueueClass,
+                         StrictPriority, TenantMap, TenantQuotaLedger,
+                         TenantRouter, TenantStatsTable, TIERS,
+                         group_class_name, make_policy, split_class_name,
+                         tenant_hash)
+from repro.sched.stats import LatencyWindow
+from repro.sched.tenants import split_hosted
+
+
+# ---------------------------------------------------------------------------
+# tenant_hash / TenantMap: deterministic routing onto the bounded grid
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_hash_is_process_stable():
+    # FNV-1a, not builtin hash(): these values must never change — a
+    # routing change strands snapshot-restored backlogs in the wrong class.
+    assert tenant_hash("t0") == tenant_hash("t0")
+    assert tenant_hash("t0") != tenant_hash("t1")
+    assert tenant_hash("t0", salt=1) != tenant_hash("t0", salt=2)
+    assert tenant_hash(42) == tenant_hash("42")  # str() canonicalization
+
+
+def test_tenant_map_routes_whole_grid_and_restores():
+    m = TenantMap(num_tenants=10000, num_groups=16, salt=7)
+    assert len(m.class_names()) == 16 * len(TIERS)
+    routed = {t: m.class_of(f"t{t}", "batch") for t in range(500)}
+    # deterministic: a restored map routes every tenant identically
+    m2 = TenantMap.from_state(json.loads(json.dumps(m.state())))
+    assert all(m2.class_of(f"t{t}", "batch") == name
+               for t, name in routed.items())
+    gid = m.group_of("t3")
+    assert split_class_name(m.class_of("t3", "interactive")) == \
+        (f"g{gid:03d}", "interactive")
+    with pytest.raises(KeyError):
+        m.class_of("t3", "premium")
+
+
+def test_tenant_map_memo_cap_does_not_change_routing():
+    m = TenantMap(num_tenants=100000, num_groups=8)
+    before = [m.group_of(f"t{t}") for t in range(3)]
+    for t in range(2 * TenantMap.CACHE_CAP):  # force a wholesale clear
+        m.group_of(f"x{t}")
+    assert [m.group_of(f"t{t}") for t in range(3)] == before
+    assert len(m._group_memo) <= TenantMap.CACHE_CAP
+
+
+def test_host_affinity_follows_group():
+    m = TenantMap(num_tenants=1000, num_groups=12)
+    for t in range(200):
+        assert m.host_of(f"t{t}", 4) == m.group_of(f"t{t}") % 4
+
+
+def test_split_hosted_is_even_and_exact():
+    assert split_hosted(10, 3) == [4, 3, 3]
+    assert split_hosted(2, 4, min_per=1) == [1, 1, 1, 1]  # floor holds
+    assert sum(split_hosted(1000, 7)) == 1000
+
+
+# ---------------------------------------------------------------------------
+# ActiveSet: the O(active) index
+# ---------------------------------------------------------------------------
+
+
+def test_active_set_mark_discard_restore():
+    a = ActiveSet()
+    a.mark("g001:batch")
+    a.mark("g000:interactive")
+    a.mark("g001:batch")  # idempotent
+    assert len(a) == 2 and "g001:batch" in a
+    a.discard("g001:batch")
+    a.discard("missing")  # no-op
+    assert a.names() == ["g000:interactive"]
+    b = ActiveSet()
+    b.restore(a.state())
+    assert b.names() == a.names()
+
+
+# ---------------------------------------------------------------------------
+# TenantStatsTable: lazy, bounded, exact totals
+# ---------------------------------------------------------------------------
+
+
+def test_stats_table_evicts_idle_but_never_backlogged():
+    t = TenantStatsTable(capacity=4)
+    for i in range(4):
+        t.note_submit(f"t{i}")
+    t.note_deliver("t0")
+    t.note_deliver("t1")  # t0/t1 idle, t2/t3 backlogged
+    t.note_submit("t9")   # over capacity -> evict an idle record
+    assert t.tracked() < 5
+    totals = t.totals()
+    assert totals["submitted"] == 5 and totals["delivered"] == 2
+    assert totals["tenants"] == 5  # evicted tenants still counted
+    top = t.top_by_backlog()
+    assert all(row["backlog"] > 0 for row in top)
+    assert {row["tenant"] for row in top} >= {"t2", "t3"}
+
+
+def test_stats_table_state_roundtrip():
+    t = TenantStatsTable(capacity=8)
+    t.note_submit("a", 3)
+    t.note_deliver("a")
+    t.note_shed("b")
+    t.note_reject("c")
+    t2 = TenantStatsTable(capacity=8)
+    t2.restore(json.loads(json.dumps(t.state())))
+    assert t2.totals() == t.totals()
+    assert t2.snapshot() == t.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# TenantQuotaLedger: per-tenant + per-host caps
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_denies_over_tenant_quota_and_credits_back():
+    led = TenantQuotaLedger(per_tenant=4, total=100, num_hosts=1)
+    assert led.charge("a", 0, 3)
+    assert not led.charge("a", 0, 2)   # 3+2 > 4
+    assert led.charge("a", 0, 1)
+    led.credit("a", 0, 4)
+    assert led.used("a") == 0 and led.host_used(0) == 0
+    assert led.charge("a", 0, 4)
+
+
+def test_ledger_host_cap_binds_before_tenant_quota():
+    led = TenantQuotaLedger(per_tenant=100, total=10, num_hosts=2)
+    assert led.host_caps == [5, 5]
+    assert led.charge("a", 0, 5)
+    assert not led.charge("b", 0, 1)  # host 0 full, b's quota untouched
+    assert led.charge("b", 1, 5)      # other host has room
+
+
+def test_ledger_rehost_conserves_totals():
+    led = TenantQuotaLedger(per_tenant=100, total=12, num_hosts=3)
+    led.charge("a", 0, 4)
+    led.charge("b", 1, 2)
+    led.rehost(2)
+    assert sum(led.host_caps) == 12
+    assert sum(led.host_used(h) for h in range(2)) == 6
+    assert led.used("a") == 4  # per-tenant usage untouched
+    led2 = TenantQuotaLedger.from_state(json.loads(json.dumps(led.state())))
+    assert led2.state() == led.state()
+
+
+# ---------------------------------------------------------------------------
+# TenantRouter: admission keys, shed/reject split, snapshot
+# ---------------------------------------------------------------------------
+
+
+def _router(**ledger_kw):
+    tmap = TenantMap(num_tenants=100, num_groups=4)
+    led = TenantQuotaLedger(**ledger_kw) if ledger_kw else None
+    return TenantRouter(tmap, TenantStatsTable(capacity=32), led)
+
+
+def test_router_attributes_deliveries_without_ledger():
+    r = _router()
+    r.note_admit("a", ("g000:batch", 0), pages=0)
+    r.note_admit("a", ("g000:batch", 1), pages=0)
+    r.on_done(("g000:batch", 0))
+    assert r.outstanding() == 1
+    assert r.stats.totals()["delivered"] == 1
+    snap = r.snapshot()
+    assert snap["totals"]["submitted"] == 2 and "quota" not in snap
+
+
+def test_router_shed_only_on_last_tier():
+    r = _router()
+    assert r.sheddable(TIERS[-1]) and not r.sheddable(TIERS[0])
+    r.note_shed("a", "g000:background")
+    r.note_reject("b")
+    assert r.shed_total == 1
+    assert r.shed_by_class == {"g000:background": 1}
+    assert r.stats.totals()["rejected"] == 1
+
+
+def test_router_state_roundtrip_preserves_tuple_keys():
+    r = _router(per_tenant=8, total=64, num_hosts=2)
+    assert r.try_charge("a", 3)
+    r.note_admit("a", ("g001:batch", 5), pages=3)
+    r.note_admit("b", "uid-7", pages=0)
+    r.note_shed("c", "g002:background")
+    r2 = TenantRouter.from_state(json.loads(json.dumps(r.state())))
+    assert r2.outstanding() == 2 and r2.shed_total == 1
+    r2.on_done(("g001:batch", 5))  # tuple key survived JSON
+    assert r2.ledger.used("a") == 0
+    assert r2.stats.totals()["delivered"] == 1
+
+
+# ---------------------------------------------------------------------------
+# HierarchicalWFQ: fair across groups, strict within, work-conserving
+# ---------------------------------------------------------------------------
+
+
+def _grid(groups, per_tier):
+    classes = []
+    for g in range(groups):
+        for pri, tier in enumerate(reversed(TIERS)):
+            qc = QueueClass(group_class_name(g, tier), priority=pri)
+            for i in range(per_tier):
+                qc.submit((g, tier, i))
+            classes.append(qc)
+    return classes
+
+
+def test_hier_shares_split_evenly_across_groups():
+    classes = _grid(groups=4, per_tier=20)
+    pol = HierarchicalWFQ()
+    got = pol.drain(classes, 40)
+    by_group = {}
+    for qc, _ in got:
+        by_group[split_class_name(qc.name)[0]] = \
+            by_group.get(split_class_name(qc.name)[0], 0) + 1
+    assert len(got) == 40
+    assert set(by_group.values()) == {10}  # equal group shares
+
+
+def test_hier_strict_priority_within_group():
+    classes = _grid(groups=1, per_tier=5)
+    got = [split_class_name(qc.name)[1] for qc, _ in
+           HierarchicalWFQ().drain(classes, 15)]
+    assert got == (["interactive"] * 5 + ["batch"] * 5 + ["background"] * 5)
+
+
+def test_hier_work_conserving_single_hot_group():
+    # 32 groups offered, one holds all the work: the re-credit loop must
+    # still fill k instead of capping the hot group at its burst cap.
+    classes = _grid(groups=32, per_tier=0)
+    hot = classes[0]
+    for i in range(100):
+        hot.submit(i)
+    got = HierarchicalWFQ().drain(classes, 48)
+    assert len(got) == 48
+    assert all(qc.name == hot.name for qc, _ in got)
+
+
+def test_hier_makes_progress_with_fractional_deficits():
+    # many groups, k=1: every per-call share is fractional, the largest-
+    # creditor fallback must still emit one item per call.
+    classes = _grid(groups=8, per_tier=1)
+    pol = HierarchicalWFQ()
+    total = sum(len(pol.drain(classes, 1)) for _ in range(8 * len(TIERS)))
+    assert total == 8 * len(TIERS)
+
+
+def test_make_policy_knows_hier():
+    assert isinstance(make_policy("hier"), HierarchicalWFQ)
+
+
+# ---------------------------------------------------------------------------
+# satellite caches: StrictPriority order, ClassFifo heap, LatencyWindow
+# ---------------------------------------------------------------------------
+
+
+def test_strict_priority_order_cache_tracks_class_set():
+    a = QueueClass("a", priority=1)
+    b = QueueClass("b", priority=5)
+    for i in range(3):
+        a.submit(i)
+        b.submit(i)
+    pol = StrictPriority()
+    assert [qc.name for qc, _ in pol.drain([a, b], 6)] == ["b"] * 3 + ["a"] * 3
+    # same set again: cached order (identity key) still drains correctly
+    a.submit(9)
+    assert [qc.name for qc, _ in pol.drain([a, b], 2)] == ["a"]
+    # changed set: cache must rebuild, not serve the stale order
+    c = QueueClass("c", priority=9)
+    c.submit(0)
+    a.submit(1)
+    assert [qc.name for qc, _ in pol.drain([a, c], 2)] == ["c", "a"]
+
+
+def test_class_fifo_heap_merges_by_stamp_after_take_held():
+    a, b = QueueClass("a"), QueueClass("b")
+    for i in range(6):  # global arrival stamps interleave the classes
+        (a if i % 2 else b).submit(i, stamp=i)
+    pol = ClassFifo()
+    first = pol.drain([a, b], 2)
+    assert [e.payload for _, e in first] == [0, 1]
+    assert pol.held() == 2  # one buffered head per class
+    # take_held simulates a reseat: buffered heads leave the policy and
+    # ride to the new seat owner; the next drain continues the merge
+    held = pol.take_held()
+    assert sorted(e.payload for _, e in held) == [2, 3]
+    assert pol.held() == 0
+    rest = pol.drain([a, b], 10)
+    assert [e.payload for _, e in rest] == [4, 5]
+    assert [e.stamp for _, e in rest] == sorted(e.stamp for _, e in rest)
+
+
+def test_latency_window_percentiles_with_cached_sort():
+    w = LatencyWindow(capacity=8)
+    assert w.percentile(50) is None
+    for v in (5.0, 1.0, 3.0):
+        w.record(v)
+    assert w.percentile(0) == 1.0 and w.percentile(100) == 5.0
+    p50_a = w.percentile(50)
+    assert w.percentile(50) == p50_a  # cached view, same answer
+    w.record_many([10.0] * 12)  # wraparound overwrite invalidates cache
+    assert w.percentile(0) == 10.0 and w.percentile(100) == 10.0
+    assert w.count == 15
+
+
+# ---------------------------------------------------------------------------
+# Fabric integration: tenant submit/step/shed/quota/snapshot
+# ---------------------------------------------------------------------------
+
+
+def _tenant_fabric(**spec_kw):
+    spec = dict(num_tenants=200, num_groups=4)
+    spec.update(spec_kw)
+    return Fabric.open(FabricConfig(tenants=TenantSpec(**spec),
+                                    queue_window=256, drain_k=16))
+
+
+def test_fabric_per_tenant_fifo_and_attribution():
+    fab = _tenant_fabric()
+    for i in range(30):
+        assert fab.submit(("a", i), tenant="alice", tier="batch") is not None
+        assert fab.submit(("b", i), tenant="bob", tier="batch") is not None
+    got = []
+    while len(got) < 60:
+        got.extend(fab.step())
+    per = {"alice": [], "bob": []}
+    for view, env in got:
+        per["alice" if env.payload[0] == "a" else "bob"].append(env.payload[1])
+    assert per["alice"] == list(range(30))  # strict per-tenant FIFO
+    assert per["bob"] == list(range(30))
+    tv = fab.stats_view().tenants
+    assert tv["totals"]["submitted"] == 60
+    assert tv["totals"]["delivered"] == 60
+    assert fab.tenants.outstanding() == 0
+    fab.close()
+
+
+def test_fabric_sheds_only_lowest_tier_under_group_pressure():
+    fab = _tenant_fabric(num_groups=1, group_window=12)
+    shed = sum(fab.submit(i, tenant="t0", tier="background") is None
+               for i in range(40))
+    assert shed > 0
+    sv = fab.stats_view()
+    shed_classes = [n for n, c in sv.classes.items() if c.shed > 0]
+    assert shed_classes == [group_class_name(0, TIERS[-1])]
+    # higher tiers under the same pressure reject, never shed
+    denied = sum(fab.submit(i, tenant="t0", tier="interactive") is None
+                 for i in range(40))
+    assert denied > 0
+    assert sv.tenants["shed_total"] == shed
+    assert fab.stats_view().tenants["totals"]["rejected"] == denied
+    fab.close()
+
+
+def test_fabric_quota_denies_then_recovers_on_delivery():
+    fab = _tenant_fabric(num_groups=1, page_quota=5)
+    admitted = [fab.submit(i, tenant="t0", tier="interactive")
+                for i in range(8)]
+    assert sum(e is not None for e in admitted) == 5  # quota binds
+    done = 0
+    while done < 5:
+        done += len(fab.step())
+    assert fab.submit(99, tenant="t0", tier="interactive") is not None
+    fab.close()
+
+
+def test_fabric_tenant_snapshot_roundtrip():
+    fab = _tenant_fabric(num_groups=2, page_quota=50)
+    for i in range(20):
+        fab.submit(i, tenant=f"t{i % 5}", tier=TIERS[i % 3])
+    snap = json.loads(json.dumps(fab.snapshot()))
+    fab.close(final_checkpoint=False)
+    fab2 = Fabric.from_snapshot(snap)
+    got = []
+    while True:
+        batch = fab2.step()
+        if not batch:
+            break
+        got.extend(batch)
+    assert len(got) == 20  # backlog survived, nothing stranded
+    tv = fab2.stats_view().tenants
+    assert tv["totals"]["delivered"] == 20
+    assert fab2.tenants.outstanding() == 0
+    # routing identity in the restored process
+    assert fab2.tenants.map.group_of("t3") == \
+        TenantMap(200, 2).group_of("t3")
+    fab2.close(final_checkpoint=False)
+
+
+def test_fabric_rejects_tenant_submit_without_tenant_spec():
+    fab = Fabric.open(FabricConfig(queue_window=64))
+    with pytest.raises(FabricConfigError):
+        fab.submit(1, tenant="t0")
+    fab.close()
+
+
+def test_kv_pool_meters_pages_through_attached_ledger():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.configs import get_config
+    from repro.serving.kv_cache import PagedKVPool
+
+    pool = PagedKVPool(get_config("yi_6b", smoke=True), num_pages=16,
+                       page_size=8, window=2)
+    led = TenantQuotaLedger(per_tenant=6, total=16, num_hosts=1)
+    pool.attach_ledger(led)
+    ids, valid = pool.alloc_for("a", 4)
+    assert int(jnp.sum(valid)) == 4 and led.used("a") == 4
+    denied, _ = pool.alloc_for("a", 3)  # 4+3 > 6: denied before the pool
+    assert denied.shape == (0,)
+    assert pool.free_pages() == 12  # the denial consumed nothing
+    pool.retire_for("a", ids)
+    assert led.used("a") == 0  # credit on retire
+    # without a ledger the tenant paths are exactly alloc/retire
+    pool.ledger = None
+    ids2, valid2 = pool.alloc_for("b", 2)
+    assert int(jnp.sum(valid2)) == 2 and led.used("b") == 0
+
+
+def test_fabric_stats_view_walks_only_active_classes():
+    fab = _tenant_fabric(num_groups=64)  # 192-class declared grid
+    fab.submit(1, tenant="t0", tier="interactive")
+    for _ in range(10):  # past the amortized retire-sweep cadence
+        fab.step()
+    sv = fab.stats_view()
+    assert sv.tenants["active_classes"] <= 2
+    # the view reports the active subset, not the declared grid
+    assert len(sv.classes) < 192
+    fab.close()
